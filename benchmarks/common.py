@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: Zipf data, the four samplers of paper Sec. 7,
+and timing helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perfect, worp
+
+
+def zipf_freqs(n: int, alpha: float, seed: int = 0) -> np.ndarray:
+    """freq(rank r) = (n / r)^alpha scaled -- the paper's Zipf[alpha]."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    f = ranks ** (-alpha)
+    f = f / f[0] * 1000.0
+    rng = np.random.default_rng(seed)
+    return f[rng.permutation(n)].astype(np.float32)
+
+
+def one_pass_state(freqs, k, p, seed_t, rows=5, width=None, batches=4):
+    """Stream the frequency vector through one-pass WORp."""
+    n = len(freqs)
+    width = width or 31 * k  # row width 31k -- the paper's k x 31 CountSketch
+    keys = jnp.arange(n)
+    fv = jnp.asarray(freqs)
+    st = worp.onepass_init(rows, width, candidates=4 * k, seed_sketch=3,
+                           seed_transform=seed_t)
+    step = (n + batches - 1) // batches
+    for lo in range(0, n, step):
+        st = worp.onepass_update(st, keys[lo:lo + step], fv[lo:lo + step], p)
+    return st
+
+
+def two_pass_sample(freqs, k, p, seed_t, **kw):
+    st1 = one_pass_state(freqs, k, p, seed_t, **kw)
+    n = len(freqs)
+    keys = jnp.arange(n)
+    fv = jnp.asarray(freqs)
+    st2 = worp.twopass_init(capacity=2 * (k + 1), seed_transform=seed_t)
+    step = (n + 3) // 4
+    for lo in range(0, n, step):
+        st2 = worp.twopass_update(st2, st1.sketch, keys[lo:lo + step],
+                                  fv[lo:lo + step])
+    return worp.twopass_sample(st2, k, p)
+
+
+def timeit(fn: Callable, *args, repeats: int = 3) -> float:
+    """Median wall time in microseconds (first call = compile, excluded)."""
+    fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,68 @@
+"""Paper Figure 1: WOR vs WR -- effective sample size + tail estimation.
+
+Left/middle panels: effective (distinct-key) sample size vs actual sample
+size for Zipf[1] and Zipf[2].  Right panel proxy: NRMSE of the tail mass
+estimate (sum of frequencies below the top-100) from ell_2 samples.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimators, perfect
+from .common import zipf_freqs
+
+
+def run(n: int = 10_000, verbose: bool = True):
+    rows = []
+    for alpha in (1.0, 2.0):
+        freqs = zipf_freqs(n, alpha, seed=int(alpha))
+        for k in (10, 100, 1000):
+            t0 = time.perf_counter()
+            eff = []
+            for t in range(10):
+                draws = np.asarray(perfect.wr_sample(
+                    jnp.asarray(freqs), k, 2.0, jax.random.PRNGKey(t)))
+                eff.append(len(np.unique(draws)))
+            us = (time.perf_counter() - t0) * 1e6 / 10
+            rows.append((f"fig1_effsize_zipf{alpha:g}_k{k}", us,
+                         f"wr_effective={np.mean(eff):.1f} wor_effective={k}"))
+            if verbose:
+                print(rows[-1])
+
+    # tail-mass estimation (right panel proxy), ell_2 samples, Zipf[2]
+    freqs = zipf_freqs(n, 2.0, seed=2)
+    order = np.argsort(-np.abs(freqs))
+    tail_keys = order[100:]
+    truth = float(np.abs(freqs[tail_keys]).sum())
+    k = 100
+    wor_est, wr_est = [], []
+    t0 = time.perf_counter()
+    for t in range(30):
+        s = perfect.ppswor_sample(jnp.asarray(freqs), k, 2.0, 7000 + t)
+        in_tail = ~jnp.isin(s.keys, jnp.asarray(order[:100]))
+        probs = estimators.inclusion_probability(s.freqs, s.threshold, 2.0)
+        wor_est.append(float(jnp.sum(jnp.where(
+            in_tail, jnp.abs(s.freqs) / jnp.maximum(probs, 1e-30), 0.0))))
+        draws = np.asarray(perfect.wr_sample(jnp.asarray(freqs), k, 2.0,
+                                             jax.random.PRNGKey(50 + t)))
+        w = np.abs(freqs).astype(np.float64)
+        p2 = w ** 2 / (w ** 2).sum()
+        contrib = np.where(np.isin(draws, tail_keys),
+                           w[draws] / (k * p2[draws]), 0.0)
+        wr_est.append(float(contrib.sum()))
+    us = (time.perf_counter() - t0) * 1e6 / 30
+    nr_wor = estimators.nrmse(np.array(wor_est), truth)
+    nr_wr = estimators.nrmse(np.array(wr_est), truth)
+    rows.append(("fig1_tailmass_zipf2_l2", us,
+                 f"wor_nrmse={nr_wor:.3e} wr_nrmse={nr_wr:.3e}"))
+    if verbose:
+        print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

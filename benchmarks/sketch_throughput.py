@@ -1,0 +1,52 @@
+"""Sketch data-plane throughput: Pallas kernel (interpret on CPU) vs the
+pure-jnp core path.  On TPU the kernel compiles via Mosaic; interpret-mode
+wall times here are correctness-path numbers, the derived column reports
+bytes/element so the roofline projection is hardware-independent."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import countsketch
+from repro.kernels import ops
+from .common import timeit
+
+
+def run(verbose: bool = True):
+    rows = []
+    for n in (100_000, 1_000_000):
+        vals = jnp.asarray(
+            np.random.default_rng(0).normal(size=n).astype(np.float32))
+
+        def core_path(v):
+            return countsketch.sketch_vector(v, 7, 2048, 3).table
+
+        us_core = timeit(core_path, vals)
+        rows.append((f"sketch_core_jnp_n{n}", us_core,
+                     f"ns_per_elem={us_core * 1e3 / n:.2f}"))
+
+        def kernel_path(v):
+            return ops.sketch_dense_vector(v, 7, 2048, seed=3, p=1.0)
+
+        us_k = timeit(kernel_path, vals)
+        rows.append((f"sketch_kernel_interp_n{n}", us_k,
+                     f"ns_per_elem={us_k * 1e3 / n:.2f} "
+                     f"hbm_bytes_per_elem=4"))
+        if verbose:
+            print(rows[-2])
+            print(rows[-1])
+
+    # query path
+    table = jnp.asarray(
+        np.random.default_rng(1).normal(size=(7, 2048)).astype(np.float32))
+    keys = jnp.arange(512)
+    us_q = timeit(lambda: ops.estimate(table, keys, seed=3))
+    rows.append(("sketch_query_k512", us_q, "per_key_us="
+                 f"{us_q / 512:.2f}"))
+    if verbose:
+        print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

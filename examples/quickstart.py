@@ -1,0 +1,47 @@
+"""Quickstart: WOR ell_p sampling of a skewed stream with WORp.
+
+Runs in seconds on CPU:
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimators, perfect, worp
+
+# --- a skewed dataset of (key, value) elements, presented in batches ------
+rng = np.random.default_rng(0)
+n, k, p = 20_000, 64, 1.0
+freqs = (np.arange(1, n + 1) ** -1.2 * 5_000).astype(np.float32)
+freqs = freqs[rng.permutation(n)]
+
+# --- one-pass WORp: composable sketch, sample-sized memory ----------------
+seed_transform = 1234
+state = worp.onepass_init(rows=5, width=31 * k, candidates=4 * k,
+                          seed_sketch=7, seed_transform=seed_transform)
+keys = jnp.arange(n)
+vals = jnp.asarray(freqs)
+for lo in range(0, n, 2_500):  # stream in batches (order never matters)
+    state = worp.onepass_update(state, keys[lo:lo + 2_500],
+                                vals[lo:lo + 2_500], p)
+sample = worp.onepass_sample(state, k, p)
+
+# --- two-pass WORp: exact p-ppswor sample ----------------------------------
+t = worp.twopass_init(capacity=2 * (k + 1), seed_transform=seed_transform)
+for lo in range(0, n, 2_500):
+    t = worp.twopass_update(t, state.sketch, keys[lo:lo + 2_500],
+                            vals[lo:lo + 2_500])
+sample2 = worp.twopass_sample(t, k, p)
+
+oracle = perfect.ppswor_sample(vals, k, p, seed_transform)
+print("two-pass == perfect p-ppswor:",
+      set(np.asarray(sample2.keys).tolist())
+      == set(np.asarray(oracle.keys).tolist()))
+print("one-pass overlap with perfect:",
+      len(set(np.asarray(sample.keys).tolist())
+          & set(np.asarray(oracle.keys).tolist())), "/", k)
+
+# --- estimate a statistic the full vector would give ----------------------
+true_l1 = float(np.abs(freqs).sum())
+est_l1 = float(estimators.sum_statistic(sample2, p, lambda w: jnp.abs(w)))
+print(f"||nu||_1: true {true_l1:.1f}  HT estimate {est_l1:.1f} "
+      f"({abs(est_l1 - true_l1) / true_l1:.2%} err) from {k} samples")

@@ -1,0 +1,34 @@
+"""Distributed stream sampling: merge WORp sketches from independent shards.
+
+Simulates 4 data shards (e.g. 4 servers) each sketching its own slice of a
+token stream; the merged sketch equals the sketch of the union -- the
+composability the paper's framework guarantees.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import worp
+from repro.data.pipeline import FrequencySketcher, ZipfStream
+
+stream = ZipfStream(vocab_size=5_000, alpha=1.5, seed=42)
+shards = [FrequencySketcher(k=64, p=0.5, seed=99) for _ in range(4)]
+for step in range(8):
+    for shard_id, sk in enumerate(shards):
+        sk.observe(jnp.asarray(stream.batch_at(step, shard_id, 8, 128)))
+
+# composable merge: shard 0 absorbs the rest
+for other in shards[1:]:
+    shards[0].merge_from(other)
+sample = shards[0].sample()
+keys = np.asarray(sample.keys)
+freqs = np.asarray(sample.freqs)
+print("top tokens by nu^0.5 (WOR):")
+for i in np.argsort(-np.abs(freqs))[:10]:
+    print(f"  token {keys[i]:5d}  est freq {freqs[i]:8.1f}")
+
+# example-selection weights for a new batch (paper Sec. 1: LM example
+# weighting by powers of frequency)
+batch = jnp.asarray(stream.batch_at(100, 0, 2, 16))
+w = shards[0].selection_weights(batch)
+print("selection weights (frequent tokens down-weighted):")
+print(np.asarray(w).round(2))

@@ -1,0 +1,71 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def load():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        r = json.load(open(f))
+        r["_file"] = os.path.basename(f)
+        recs.append(r)
+    return recs
+
+
+def fmt_table(recs, mesh):
+    rows = [r for r in recs if r.get("status") == "ok"
+            and r.get("mesh") == mesh and r.get("rules", "baseline")
+            == "baseline" and not r.get("wedge")]
+    out = ["| arch | shape | comp (ms) | mem (ms) | coll (ms) | bottleneck |"
+           " MODEL/HLO flops | args+out (GB/dev) | temp (GB/dev) |",
+           "|---|---|---:|---:|---:|---|---:|---:|---:|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        ms = r.get("memory_stats", {})
+        ao = (ms.get("argument_size_in_bytes", 0)
+              + ms.get("output_size_in_bytes", 0)) / 1e9
+        tmp = ms.get("temp_size_in_bytes", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} "
+            f"| {r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.3f} "
+            f"| {ao:.2f} | {tmp:.2f} |")
+    return "\n".join(out)
+
+
+def fmt_skips(recs):
+    rows = [r for r in recs if r.get("status") == "skip"
+            and r.get("mesh", "single") == "single"]
+    return "\n".join(f"* {r['arch']} x {r['shape']}: {r['reason']}"
+                     for r in sorted(rows, key=lambda r: r["arch"]))
+
+
+def fmt_variants(recs):
+    rows = [r for r in recs if r.get("status") == "ok"
+            and (r.get("rules", "baseline") != "baseline" or r.get("wedge"))]
+    out = ["| cell | variant | comp (ms) | mem (ms) | coll (ms) |"
+           " bottleneck | MODEL/HLO |",
+           "|---|---|---:|---:|---:|---|---:|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        var = r.get("rules", "") + ("+wedge" if r.get("wedge") else "")
+        out.append(
+            f"| {r['arch']} {r['shape']} | {var} | {r['t_compute']*1e3:.2f} "
+            f"| {r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    print(f"{len(ok)} ok / {len(recs)} total")
+    print("\n## single-pod baseline\n")
+    print(fmt_table(recs, "single"))
+    print("\n## multi-pod (existence; RAW uncorrected costs)\n")
+    print(fmt_table(recs, "multi"))
+    print("\n## skips\n")
+    print(fmt_skips(recs))
+    print("\n## variants\n")
+    print(fmt_variants(recs))

@@ -1,0 +1,17 @@
+"""repro.core -- WORp: composable sketches for WOR ell_p sampling.
+
+Paper: Cohen, Pagh, Woodruff -- "WOR and p's: Sketches for l_p-Sampling
+Without Replacement" (2020).
+"""
+from . import (  # noqa: F401
+    counters,
+    countsketch,
+    estimators,
+    hashing,
+    perfect,
+    psi,
+    transforms,
+    tv_sampler,
+    worp,
+)
+from .perfect import Sample  # noqa: F401

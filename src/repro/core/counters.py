@@ -1,0 +1,103 @@
+"""Counter-based ell_1 rHH sketch (Misra-Gries / SpaceSaving family).
+
+Positive-value elements only (paper Table 1, 'Counters (ell_1, +)').  A sketch
+with m counters gives frequency estimates with additive error at most
+||tail_k(nu)||_1 / (m - k)   [Berinde et al., rHH adaptation].
+
+Fixed-capacity functional implementation: state is (keys, counts) arrays of
+static shape m, so it jits and merges inside jax.  Empty slots hold key = -1.
+
+Merge follows the mergeable-summaries construction [Agarwal et al.]: sum
+counts of common keys, keep the top-m by count, and subtract the (m+1)-st
+count from every survivor (the classic MG offset), preserving the
+underestimate + error bound.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EMPTY = jnp.int32(-1)
+
+
+class Counters(NamedTuple):
+    keys: jnp.ndarray    # (m,) int32, -1 = empty
+    counts: jnp.ndarray  # (m,) float32  (MG lower-bound counts)
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+
+def init(capacity: int) -> Counters:
+    return Counters(
+        keys=jnp.full((capacity,), _EMPTY, jnp.int32),
+        counts=jnp.zeros((capacity,), jnp.float32),
+    )
+
+
+def _aggregate_batch(keys: jnp.ndarray, values: jnp.ndarray):
+    """Combine duplicate keys within a batch (sum their values).
+
+    Returns (unique_keys, sums) of the same static length with -1 padding.
+    """
+    order = jnp.argsort(keys)
+    sk, sv = keys[order], values[order]
+    first = jnp.concatenate([jnp.array([True]), sk[1:] != sk[:-1]])
+    seg = jnp.cumsum(first) - 1
+    sums = jax.ops.segment_sum(sv, seg, num_segments=keys.shape[0])
+    uk = jnp.where(first, sk, _EMPTY)
+    us = jnp.where(first, sums[seg], 0.0)
+    return uk, us.astype(jnp.float32)
+
+
+def _combine(keys_a, counts_a, keys_b, counts_b, capacity: int) -> Counters:
+    """Combine two (key, count) multisets; keep top-`capacity` with MG offset."""
+    keys = jnp.concatenate([keys_a, keys_b])
+    counts = jnp.concatenate([counts_a, counts_b])
+    # Deduplicate: sort by key, segment-sum counts of equal keys.
+    order = jnp.argsort(keys)
+    sk, sc = keys[order], counts[order]
+    first = jnp.concatenate([jnp.array([True]), sk[1:] != sk[:-1]])
+    seg = jnp.cumsum(first) - 1
+    sums = jax.ops.segment_sum(sc, seg, num_segments=keys.shape[0])
+    dk = jnp.where(first, sk, _EMPTY)
+    dc = jnp.where(first & (dk != _EMPTY), sums[seg], -jnp.inf)
+    # Top-(capacity) by count; (capacity+1)-st becomes the MG offset.
+    top_c, top_i = jax.lax.top_k(dc, capacity + 1)
+    offset = jnp.maximum(top_c[capacity], 0.0)
+    offset = jnp.where(jnp.isfinite(offset), offset, 0.0)
+    keep_c = top_c[:capacity]
+    keep_k = dk[top_i[:capacity]]
+    alive = jnp.isfinite(keep_c) & (keep_k != _EMPTY)
+    new_counts = jnp.where(alive, jnp.maximum(keep_c - offset, 0.0), 0.0)
+    new_keys = jnp.where(alive & (new_counts > 0), keep_k, _EMPTY)
+    return Counters(keys=new_keys, counts=new_counts)
+
+
+def update(cs: Counters, keys: jnp.ndarray, values: jnp.ndarray) -> Counters:
+    """Process a batch of positive-valued elements."""
+    uk, us = _aggregate_batch(jnp.asarray(keys, jnp.int32),
+                              jnp.asarray(values, jnp.float32))
+    us = jnp.where(uk == _EMPTY, -jnp.inf, us)
+    return _combine(cs.keys, cs.counts, uk, jnp.where(jnp.isfinite(us), us, 0.0) *
+                    jnp.where(uk == _EMPTY, 0.0, 1.0), cs.capacity)
+
+
+def merge(a: Counters, b: Counters) -> Counters:
+    return _combine(a.keys, a.counts, b.keys, b.counts, a.capacity)
+
+
+def estimate(cs: Counters, keys: jnp.ndarray) -> jnp.ndarray:
+    """Lower-bound estimates: stored count if present else 0."""
+    keys = jnp.asarray(keys, jnp.int32)
+    eq = cs.keys[None, :] == keys[:, None]  # (n, m)
+    return jnp.sum(jnp.where(eq, cs.counts[None, :], 0.0), axis=1)
+
+
+def stored(cs: Counters):
+    """(keys, counts) of live slots (padded with -1 / 0)."""
+    alive = cs.keys != _EMPTY
+    return jnp.where(alive, cs.keys, _EMPTY), jnp.where(alive, cs.counts, 0.0)

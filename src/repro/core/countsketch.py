@@ -1,0 +1,107 @@
+"""Composable CountSketch (ell_2 rHH sketch; Charikar-Chen-Farach-Colton).
+
+The sketch is LINEAR in the input frequency vector: process/merge are sums.
+This is what gives WORp its signed-update (turnstile) support for p in (0, 2]
+and what lets distributed workers psum sketches instead of dense gradients.
+
+API mirrors the paper's Sec. 2.3 off-the-shelf interface:
+  init / process / merge / est
+plus vectorized batch forms used by the framework.
+
+The pure-jnp implementation here is the reference path; the Pallas TPU kernel
+in ``repro.kernels.countsketch_update`` computes the same table (bit-exact in
+fp32 up to reduction order) for the gradient-compression hot path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+
+
+class CountSketch(NamedTuple):
+    """CountSketch state: a pytree, so it can live inside jit/scan/psum."""
+
+    table: jnp.ndarray  # (rows, width) float32
+    seed: jnp.ndarray   # uint32 scalar -- keys the row/sign hash family
+
+    @property
+    def rows(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.table.shape[1]
+
+
+def init(rows: int, width: int, seed, dtype=jnp.float32) -> CountSketch:
+    return CountSketch(
+        table=jnp.zeros((rows, width), dtype),
+        seed=jnp.asarray(seed, jnp.uint32),
+    )
+
+
+def _row_buckets_signs(sk: CountSketch, keys: jnp.ndarray):
+    """(rows, n) bucket ids and signs for a key batch."""
+    rows = sk.rows
+
+    def one_row(r):
+        salt = hashing.row_salt(sk.seed, r)
+        return (
+            hashing.bucket_hash(keys, salt, sk.width),
+            hashing.sign_hash(keys, salt),
+        )
+
+    buckets, signs = jax.vmap(one_row)(jnp.arange(rows, dtype=jnp.uint32))
+    return buckets, signs
+
+
+def update(sk: CountSketch, keys: jnp.ndarray, values: jnp.ndarray) -> CountSketch:
+    """Process a batch of elements (key, value).  Linear: values may be signed,
+    and updating with ``-values`` exactly cancels a prior update."""
+    keys = jnp.asarray(keys)
+    values = jnp.asarray(values, sk.table.dtype)
+    buckets, signs = _row_buckets_signs(sk, keys)
+    sv = signs * values[None, :]  # (rows, n)
+    row_ids = jnp.broadcast_to(
+        jnp.arange(sk.rows, dtype=jnp.int32)[:, None], buckets.shape
+    )
+    table = sk.table.at[row_ids.reshape(-1), buckets.reshape(-1)].add(sv.reshape(-1))
+    return CountSketch(table=table, seed=sk.seed)
+
+
+def merge(a: CountSketch, b: CountSketch) -> CountSketch:
+    """Merge sketches of two datasets (same params+seed): table addition."""
+    return CountSketch(table=a.table + b.table, seed=a.seed)
+
+
+def estimate(sk: CountSketch, keys: jnp.ndarray) -> jnp.ndarray:
+    """R.Est(x): median over rows of sign * bucket  (unbiased per row)."""
+    buckets, signs = _row_buckets_signs(sk, keys)
+    vals = jnp.take_along_axis(sk.table, buckets, axis=1) * signs  # (rows, n)
+    return jnp.median(vals, axis=0)
+
+
+def estimate_single_row(sk: CountSketch, keys: jnp.ndarray, row: int) -> jnp.ndarray:
+    salt = hashing.row_salt(sk.seed, jnp.uint32(row))
+    b = hashing.bucket_hash(keys, salt, sk.width)
+    s = hashing.sign_hash(keys, salt)
+    return sk.table[row, b] * s
+
+
+def sketch_vector(vec: jnp.ndarray, rows: int, width: int, seed) -> CountSketch:
+    """Sketch a dense frequency vector (keys = [0, n))."""
+    sk = init(rows, width, seed, dtype=vec.dtype)
+    return update(sk, jnp.arange(vec.shape[0]), vec)
+
+
+def l2_error_bound(sk: CountSketch, k: int) -> jnp.ndarray:
+    """Data-independent proxy of the (k, psi)-rHH guarantee (Table 1):
+    returns an estimate of ||tail_k||_2 * sqrt(k_eff / width) usable as a
+    failure test (App. A 'Testing for failure'); uses the table's own mass."""
+    # ||table_row||_2^2 is an unbiased estimate of ||nu||_2^2 per row.
+    row_l2 = jnp.sum(sk.table.astype(jnp.float32) ** 2, axis=1)
+    return jnp.sqrt(jnp.median(row_l2) / sk.width)

@@ -1,0 +1,88 @@
+"""Inverse-probability (Horvitz-Thompson) estimators over bottom-k samples.
+
+Paper Eq. (1): for a bottom-k sample S with threshold tau,
+    f(w_x)-hat = f(w_x) / Pr_{r~D}[ r <= (|w_x| / tau)^p ]      if x in S
+(0 otherwise).  For p-ppswor, D = Exp[1] so the inclusion probability is
+    p_x = 1 - exp( -(|nu_x| / tau)^p ).
+For p-priority, D = U[0,1]: p_x = min(1, (|nu_x|/tau)^p).
+
+One-pass WORp (Eq. 17) plugs the *estimated* frequency nu'_x and estimated
+threshold into the same formula; Theorem 5.1 bounds the resulting bias/MSE.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from . import transforms
+from .perfect import Sample
+
+
+def inclusion_probability(
+    freqs: jnp.ndarray, tau: jnp.ndarray, p: float,
+    scheme: str = transforms.PPSWOR,
+) -> jnp.ndarray:
+    ratio = (jnp.abs(freqs.astype(jnp.float32)) / tau) ** jnp.float32(p)
+    if scheme == transforms.PPSWOR:
+        # Guard the p_x -> 0 limit: expm1 keeps precision for small ratios.
+        return -jnp.expm1(-ratio)
+    if scheme == transforms.PRIORITY:
+        return jnp.minimum(ratio, 1.0)
+    raise ValueError(scheme)
+
+
+def per_key_estimates(
+    sample: Sample, p: float, f: Callable[[jnp.ndarray], jnp.ndarray],
+    scheme: str = transforms.PPSWOR,
+) -> jnp.ndarray:
+    """f(nu_x)-hat for each sampled key (Eq. 1 / Eq. 17).
+
+    Exact sample (two-pass / perfect): unbiased.  One-pass sample: same code
+    path with estimated freqs/threshold -- note threshold for one-pass is the
+    estimate of the (k+1)-st TRANSFORMED frequency, matching Eq. 17 where the
+    exponent uses nu'_x / tau-hat.
+    """
+    probs = inclusion_probability(sample.freqs, sample.threshold, p, scheme)
+    return f(sample.freqs) / jnp.maximum(probs, 1e-30)
+
+
+def sum_statistic(
+    sample: Sample, p: float,
+    f: Callable[[jnp.ndarray], jnp.ndarray],
+    L: jnp.ndarray | None = None,
+    scheme: str = transforms.PPSWOR,
+) -> jnp.ndarray:
+    """Unbiased estimate of  sum_x f(nu_x) L_x  (Eq. 2).
+
+    ``L`` -- optional per-sampled-key selection values (default 1)."""
+    est = per_key_estimates(sample, p, f, scheme)
+    if L is not None:
+        est = est * L
+    return jnp.sum(est)
+
+
+def frequency_moment(sample: Sample, p: float, power: float,
+                     scheme: str = transforms.PPSWOR) -> jnp.ndarray:
+    """||nu||_{p'}^{p'} estimate from an ell_p sample (paper Table 3)."""
+    return sum_statistic(sample, p, lambda w: jnp.abs(w) ** power, None, scheme)
+
+
+def rank_frequency_estimate(sample: Sample, p: float,
+                            scheme: str = transforms.PPSWOR):
+    """Paper Fig. 2: estimate of the rank -> frequency distribution.
+
+    Returns (sorted |nu| desc, HT weights): each sampled key represents
+    1/p_x keys of its frequency; cumulative weights give estimated ranks.
+    """
+    probs = inclusion_probability(sample.freqs, sample.threshold, p, scheme)
+    order = jnp.argsort(-jnp.abs(sample.freqs))
+    return jnp.abs(sample.freqs)[order], (1.0 / jnp.maximum(probs, 1e-30))[order]
+
+
+def nrmse(estimates: jnp.ndarray, truth: float) -> float:
+    """Normalized root mean squared error over repeated runs (Table 3)."""
+    import numpy as np
+
+    e = np.asarray(estimates, np.float64)
+    return float(np.sqrt(np.mean((e - truth) ** 2)) / abs(truth))

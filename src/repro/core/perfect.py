@@ -1,0 +1,63 @@
+"""Perfect (oracle) samplers over aggregated frequency vectors.
+
+Used as ground truth in tests and benchmarks (paper Sec. 7 compares WORp
+against 'perfect WOR' = p-ppswor and 'perfect WR').  These operate on the
+explicit frequency vector, which WORp exists to avoid -- they are oracles,
+not sketches.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transforms
+
+
+class Sample(NamedTuple):
+    keys: jnp.ndarray       # (k,) int32 sampled keys, by decreasing |nu*|
+    freqs: jnp.ndarray      # (k,) frequencies nu_x (exact or estimated)
+    threshold: jnp.ndarray  # scalar tau = (k+1)-st largest |nu*|
+    transformed: jnp.ndarray  # (k,) nu*_x of the sampled keys
+
+
+def ppswor_sample(
+    freqs: jnp.ndarray, k: int, p: float, seed, scheme: str = transforms.PPSWOR
+) -> Sample:
+    """Exact bottom-k (p-ppswor / p-priority) sample of nu^p.
+
+    Top-k keys by |nu*_x| = |nu_x| / r_x^{1/p}, threshold = (k+1)-st magnitude.
+    """
+    n = freqs.shape[0]
+    keys = jnp.arange(n, dtype=jnp.int32)
+    tstar = transforms.transform_frequencies(keys, freqs.astype(jnp.float32), p,
+                                             seed, scheme)
+    mag = jnp.abs(tstar)
+    top_vals, top_idx = jax.lax.top_k(mag, k + 1)
+    sel = top_idx[:k]
+    return Sample(
+        keys=sel.astype(jnp.int32),
+        freqs=freqs[sel],
+        threshold=top_vals[k],
+        transformed=tstar[sel],
+    )
+
+
+def wr_sample(freqs: jnp.ndarray, k: int, p: float, key: jax.Array):
+    """Perfect WITH-replacement ell_p sample: k i.i.d. draws ~ |nu_x|^p."""
+    logits = p * jnp.log(jnp.maximum(jnp.abs(freqs.astype(jnp.float32)), 1e-38))
+    logits = jnp.where(freqs == 0, -jnp.inf, logits)
+    draws = jax.random.categorical(key, logits, shape=(k,))
+    return draws.astype(jnp.int32)
+
+
+def successive_wor_probability(freqs: jnp.ndarray, sample_keys: jnp.ndarray,
+                               p: float) -> jnp.ndarray:
+    """prod_j  w_{i_j} / (||w||_1 - sum_{h<j} w_{i_h})  with w = |nu|^p
+    (Appendix F: the k-tuple probability of successive WOR sampling)."""
+    w = jnp.abs(freqs.astype(jnp.float64)) ** p
+    total = jnp.sum(w)
+    picked = w[sample_keys]
+    cum = jnp.concatenate([jnp.zeros((1,), w.dtype), jnp.cumsum(picked)[:-1]])
+    return jnp.prod(picked / (total - cum))

@@ -1,0 +1,64 @@
+"""The bottom-k (p-ppswor / p-priority) transform -- paper Eq. (4)-(6).
+
+Sampling by nu^p with distribution D reduces to top-k by the *transformed*
+frequency  nu*_x = nu_x / r_x^{1/p},  r_x ~ D.  Because r_x is a pure function
+of (key, seed) the transform distributes: every shard scales its elements
+locally (Eq. 5) and the transformed frequency vector aggregates correctly
+under merges and signed updates.
+
+D = Exp[1]   -> p-ppswor   (the paper's main instrument)
+D = U[0, 1]  -> p-priority (sequential Poisson)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import hashing
+
+PPSWOR = "ppswor"
+PRIORITY = "priority"
+
+
+def randomizer(keys: jnp.ndarray, seed, scheme: str = PPSWOR) -> jnp.ndarray:
+    """r_x ~ D for each key, derived from the shared hash (Sec. 2.2)."""
+    if scheme == PPSWOR:
+        return hashing.exp1(keys, seed)
+    if scheme == PRIORITY:
+        return hashing.uniform01(keys, seed)
+    raise ValueError(f"unknown bottom-k scheme: {scheme}")
+
+
+def transform_values(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    p: float,
+    seed,
+    scheme: str = PPSWOR,
+) -> jnp.ndarray:
+    """Element-wise transform (Eq. 5):  val -> val / r_key^{1/p}.
+
+    Applied independently per element; summing transformed values per key
+    yields nu*_x = nu_x / r_x^{1/p}.
+    """
+    r = randomizer(keys, seed, scheme)
+    return jnp.asarray(values) * r.astype(values.dtype) ** jnp.asarray(
+        -1.0 / p, values.dtype
+    )
+
+
+def transform_frequencies(
+    keys: jnp.ndarray, freqs: jnp.ndarray, p: float, seed, scheme: str = PPSWOR
+) -> jnp.ndarray:
+    """nu -> nu* on an aggregated vector (same math as transform_values)."""
+    return transform_values(keys, freqs, p, seed, scheme)
+
+
+def invert_frequency(
+    keys: jnp.ndarray, est_transformed: jnp.ndarray, p: float, seed,
+    scheme: str = PPSWOR,
+) -> jnp.ndarray:
+    """Eq. (6): recover nu'_x = nu*_x-hat * r_x^{1/p}; relative error preserved."""
+    r = randomizer(keys, seed, scheme)
+    return est_transformed * r.astype(est_transformed.dtype) ** jnp.asarray(
+        1.0 / p, est_transformed.dtype
+    )

@@ -1,0 +1,222 @@
+"""WORp: without-replacement ell_p sampling via rHH sketches (paper Secs. 4-5).
+
+Both variants are composable: states are pytrees with fixed shapes, and
+``merge`` computes the state of the union of two datasets.  All randomness is
+hash-derived from shared seeds, so shards agree on the p-ppswor transform.
+
+One-pass WORp (Sec. 5)
+  state   = CountSketch of transformed elements + a top-C candidate buffer
+  sample  = top-k keys by estimated |nu*|, threshold = (k+1)-st estimate,
+            frequencies recovered via Eq. (6).
+
+Two-pass WORp (Sec. 4, Algorithm 2)
+  pass I  = CountSketch R of transformed elements
+  pass II = top-C buffer T keyed by FROZEN priorities R.Est, accumulating
+            exact frequencies (practical optimization Lemma 4.2: since
+            priorities never change during pass II and the buffer keeps the
+            top-C by priority, any key in the final buffer was retained from
+            its first pass-II appearance -> exact counts).
+  sample  = top-k stored keys by exact |nu*| = |nu_x| / r_x^{1/p}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import countsketch, transforms
+from .perfect import Sample
+
+_EMPTY = jnp.int32(-1)
+_NEG = jnp.float32(-jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# shared fixed-shape (key -> value, priority) buffer combinator
+# ---------------------------------------------------------------------------
+
+def _dedup_topc(keys, values, priors, capacity: int):
+    """Deduplicate by key (summing values; priorities of equal keys agree),
+    then keep the top-``capacity`` entries by priority.  -1 keys are padding.
+    """
+    # Sort by key so duplicates are adjacent.
+    order = jnp.argsort(keys)
+    sk, sv, sp = keys[order], values[order], priors[order]
+    first = jnp.concatenate([jnp.array([True]), sk[1:] != sk[:-1]])
+    seg = jnp.cumsum(first) - 1
+    vsum = jax.ops.segment_sum(sv, seg, num_segments=keys.shape[0])
+    dk = jnp.where(first & (sk != _EMPTY), sk, _EMPTY)
+    dv = jnp.where(dk != _EMPTY, vsum[seg], 0.0)
+    dp = jnp.where(dk != _EMPTY, sp, _NEG)
+    top_p, top_i = jax.lax.top_k(dp, capacity)
+    return dk[top_i], dv[top_i], top_p
+
+
+# ---------------------------------------------------------------------------
+# One-pass WORp
+# ---------------------------------------------------------------------------
+
+class OnePassState(NamedTuple):
+    sketch: countsketch.CountSketch
+    cand_keys: jnp.ndarray  # (C,) int32 candidate heavy keys (-1 = empty)
+    seed_transform: jnp.ndarray  # uint32: seeds r_x for the p-ppswor transform
+
+
+def onepass_init(
+    rows: int, width: int, candidates: int, seed_sketch, seed_transform
+) -> OnePassState:
+    return OnePassState(
+        sketch=countsketch.init(rows, width, seed_sketch),
+        cand_keys=jnp.full((candidates,), _EMPTY, jnp.int32),
+        seed_transform=jnp.asarray(seed_transform, jnp.uint32),
+    )
+
+
+def onepass_update(
+    st: OnePassState, keys: jnp.ndarray, values: jnp.ndarray, p: float,
+    scheme: str = transforms.PPSWOR,
+) -> OnePassState:
+    """Process an element batch: transform (Eq. 5), sketch, refresh candidates."""
+    keys = jnp.asarray(keys, jnp.int32)
+    tvals = transforms.transform_values(
+        keys, jnp.asarray(values, jnp.float32), p, st.seed_transform, scheme
+    )
+    sk = countsketch.update(st.sketch, keys, tvals)
+    # Candidate refresh: current estimates of (old candidates U batch keys).
+    all_keys = jnp.concatenate([st.cand_keys, keys])
+    est = jnp.abs(countsketch.estimate(sk, all_keys))
+    est = jnp.where(all_keys == _EMPTY, _NEG, est)
+    ck, _, _ = _dedup_topc(all_keys, jnp.zeros_like(est), est,
+                           st.cand_keys.shape[0])
+    return OnePassState(sketch=sk, cand_keys=ck, seed_transform=st.seed_transform)
+
+
+def onepass_merge(a: OnePassState, b: OnePassState) -> OnePassState:
+    sk = countsketch.merge(a.sketch, b.sketch)
+    all_keys = jnp.concatenate([a.cand_keys, b.cand_keys])
+    est = jnp.abs(countsketch.estimate(sk, all_keys))
+    est = jnp.where(all_keys == _EMPTY, _NEG, est)
+    ck, _, _ = _dedup_topc(all_keys, jnp.zeros_like(est), est,
+                           a.cand_keys.shape[0])
+    return OnePassState(sketch=sk, cand_keys=ck, seed_transform=a.seed_transform)
+
+
+def onepass_sample(
+    st: OnePassState, k: int, p: float, scheme: str = transforms.PPSWOR
+) -> Sample:
+    """Top-k candidates by estimated |nu*|; threshold = (k+1)-st estimate;
+    approximate frequencies nu' via Eq. (6)."""
+    est = countsketch.estimate(st.sketch, st.cand_keys)
+    mag = jnp.where(st.cand_keys == _EMPTY, _NEG, jnp.abs(est))
+    top_mag, top_i = jax.lax.top_k(mag, k + 1)
+    sel = st.cand_keys[top_i[:k]]
+    est_sel = est[top_i[:k]]
+    freqs = transforms.invert_frequency(sel, est_sel, p, st.seed_transform,
+                                        scheme)
+    return Sample(
+        keys=sel,
+        freqs=freqs,
+        threshold=top_mag[k],
+        transformed=est_sel,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Two-pass WORp (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+class TwoPassState(NamedTuple):
+    """Pass-II structure T: exact frequencies keyed by frozen priorities."""
+    keys: jnp.ndarray      # (C,) int32
+    freqs: jnp.ndarray     # (C,) float32 exact accumulated nu_x (this pass)
+    priority: jnp.ndarray  # (C,) float32 frozen |R.Est| priorities
+    seed_transform: jnp.ndarray
+
+
+def twopass_init(capacity: int, seed_transform) -> TwoPassState:
+    return TwoPassState(
+        keys=jnp.full((capacity,), _EMPTY, jnp.int32),
+        freqs=jnp.zeros((capacity,), jnp.float32),
+        priority=jnp.full((capacity,), _NEG, jnp.float32),
+        seed_transform=jnp.asarray(seed_transform, jnp.uint32),
+    )
+
+
+def twopass_update(
+    st: TwoPassState,
+    frozen: countsketch.CountSketch,
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+) -> TwoPassState:
+    """Pass II step: accumulate exact frequencies for top-priority keys.
+
+    ``frozen`` is the (already merged, global) pass-I sketch: priorities
+    |R.Est| do not change during pass II.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.float32)
+    prio = jnp.abs(countsketch.estimate(frozen, keys))
+    prio = jnp.where(keys == _EMPTY, _NEG, prio)
+    all_k = jnp.concatenate([st.keys, keys])
+    all_v = jnp.concatenate([st.freqs, values])
+    all_p = jnp.concatenate([st.priority, prio])
+    nk, nv, np_ = _dedup_topc(all_k, all_v, all_p, st.keys.shape[0])
+    return TwoPassState(keys=nk, freqs=nv, priority=np_,
+                        seed_transform=st.seed_transform)
+
+
+def twopass_merge(a: TwoPassState, b: TwoPassState) -> TwoPassState:
+    all_k = jnp.concatenate([a.keys, b.keys])
+    all_v = jnp.concatenate([a.freqs, b.freqs])
+    all_p = jnp.concatenate([a.priority, b.priority])
+    nk, nv, np_ = _dedup_topc(all_k, all_v, all_p, a.keys.shape[0])
+    return TwoPassState(keys=nk, freqs=nv, priority=np_,
+                        seed_transform=a.seed_transform)
+
+
+def twopass_sample(
+    st: TwoPassState, k: int, p: float, scheme: str = transforms.PPSWOR
+) -> Sample:
+    """Final sample: top-k stored keys by EXACT |nu*|, exact frequencies."""
+    safe_keys = jnp.where(st.keys == _EMPTY, 0, st.keys)
+    tstar = transforms.transform_frequencies(
+        safe_keys, st.freqs, p, st.seed_transform, scheme
+    )
+    mag = jnp.where(st.keys == _EMPTY, _NEG, jnp.abs(tstar))
+    top_mag, top_i = jax.lax.top_k(mag, k + 1)
+    sel = top_i[:k]
+    return Sample(
+        keys=st.keys[sel],
+        freqs=st.freqs[sel],
+        threshold=top_mag[k],
+        transformed=tstar[sel],
+    )
+
+
+def twopass_extended_sample(st: TwoPassState, k: int, p: float,
+                            scheme: str = transforms.PPSWOR):
+    """Practical optimization Sec 4.1 (second): certify a larger effective
+    sample.  Any key with nu* >= L + nu*_{(k+1)}/3 (L = min estimate retained)
+    must be stored; returns a boolean mask over stored slots plus threshold."""
+    safe_keys = jnp.where(st.keys == _EMPTY, 0, st.keys)
+    tstar = transforms.transform_frequencies(
+        safe_keys, st.freqs, p, st.seed_transform, scheme)
+    mag = jnp.where(st.keys == _EMPTY, _NEG, jnp.abs(tstar))
+    top_mag, _ = jax.lax.top_k(mag, k + 1)
+    err = top_mag[k] / 3.0
+    live_prio = jnp.where(st.keys == _EMPTY, jnp.inf, st.priority)
+    L = jnp.min(live_prio)
+    certified = mag >= (L + err)
+    # Threshold = min certified nu* (tau for estimation over the larger sample).
+    tau = jnp.min(jnp.where(certified, mag, jnp.inf))
+    return certified, tau
+
+
+def failure_test(sk: countsketch.CountSketch, sample: Sample, k: int,
+                 p: float, q: float = 2.0) -> jnp.ndarray:
+    """Appendix A 'Testing for failure': flag if the k-th estimated transformed
+    frequency is not above the sketch's own error scale."""
+    err = countsketch.l2_error_bound(sk, k)
+    kth = jnp.min(jnp.abs(sample.transformed))
+    return kth < err

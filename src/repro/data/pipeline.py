@@ -1,0 +1,82 @@
+"""Deterministic sharded data pipeline + WORp-weighted example selection.
+
+Determinism contract (fault tolerance): ``batch_at(seed, step, shard)`` is a
+pure function -- a restarted job replays exactly the batches the crashed job
+would have seen, with no data-loader state to checkpoint.
+
+The WORp hook: token/example frequencies over the stream are summarized by a
+composable one-pass WORp sketch (one per shard, merged across shards), and
+``selection_weights`` turns the WOR sample into p-th-power frequency weights
+for example re-weighting (paper Sec. 1: language models weight by nu^p,
+p < 1, to mitigate frequent examples).
+"""
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import worp
+
+
+class ZipfStream(NamedTuple):
+    """Synthetic Zipf[alpha] token stream (the paper's experimental family)."""
+    vocab_size: int
+    alpha: float
+    seed: int
+
+    def batch_at(self, step: int, shard: int, batch: int, seq: int
+                 ) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard]))
+        ranks = rng.zipf(self.alpha, size=(batch, seq))
+        return np.minimum(ranks - 1, self.vocab_size - 1).astype(np.int32)
+
+    def lm_batch(self, step: int, shard: int, batch: int, seq: int) -> dict:
+        toks = self.batch_at(step, shard, batch, seq + 1)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    def iterator(self, shard: int, batch: int, seq: int,
+                 start_step: int = 0) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.lm_batch(step, shard, batch, seq)
+            step += 1
+
+
+class FrequencySketcher:
+    """Composable WORp sketch over a token stream (per shard; mergeable)."""
+
+    def __init__(self, k: int = 128, rows: int = 7, width: int = 0,
+                 p: float = 0.5, seed: int = 17):
+        width = width or 31 * k  # the paper's practical k x 31 size
+        self.k, self.p = k, p
+        self.state = worp.onepass_init(rows, width, candidates=4 * k,
+                                       seed_sketch=seed,
+                                       seed_transform=seed + 1)
+
+    def observe(self, tokens: jnp.ndarray):
+        flat = tokens.reshape(-1)
+        self.state = worp.onepass_update(
+            self.state, flat, jnp.ones_like(flat, jnp.float32), self.p)
+
+    def merge_from(self, other: "FrequencySketcher"):
+        self.state = worp.onepass_merge(self.state, other.state)
+
+    def sample(self):
+        return worp.onepass_sample(self.state, self.k, self.p)
+
+    def selection_weights(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Per-token weights nu_hat^p for the sampled heavy tokens, 1 for the
+        tail -- down-weighting frequent examples when p < 1 is interpreted as
+        weighting BY the inverse ratio (freq/heavy)^p."""
+        s = self.sample()
+        flat = tokens.reshape(-1)
+        eq = flat[:, None] == s.keys[None, :]
+        est = jnp.sum(jnp.where(eq, jnp.abs(s.freqs)[None, :], 0.0), axis=1)
+        ref = jnp.max(jnp.abs(s.freqs))
+        w = jnp.where(est > 0, (est / ref) ** jnp.float32(-self.p), 1.0)
+        return w.reshape(tokens.shape)

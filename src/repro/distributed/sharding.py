@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules (MaxText-style) + divisibility-aware resolver.
+
+Model code annotates params/activations with LOGICAL axis names; the rules
+map logical names to mesh axes.  ``resolve_pspec`` drops a mapping when the
+dimension is not divisible by the mesh-axis size (e.g. gemma2's 8 heads on a
+16-way model axis) or when the mesh axis was already claimed by an earlier
+dimension -- so one rule set serves all 10 architectures, and changing the
+rules (the perf-hillclimb lever) never produces an invalid sharding.
+
+Param logical axes    : embed, vocab, heads, kv_heads, head_dim, mlp,
+                        experts, expert_mlp, layers, conv, state, lru
+Activation logical axes: act_batch, act_seq, act_embed, act_heads,
+                        act_kv_heads, act_mlp, act_vocab, act_experts,
+                        cache_seq, cache_kv
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# rule sets
+# ---------------------------------------------------------------------------
+
+# Baseline production rules: FSDP over (pod, data) for big param matrices,
+# tensor parallelism over 'model' for heads/mlp/vocab/experts, batch over
+# (pod, data).  Decode KV caches shard their sequence axis over 'model'
+# (sequence parallelism) because kv_heads rarely divide the model axis.
+DEFAULT_RULES = {
+    # params
+    "embed": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": ("model",),
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "lru": ("model",),
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": ("model",),
+    "act_q_blocks": None,  # context parallelism (perf variant "qpar")
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": ("model",),
+    "act_lru": ("model",),
+    "cache_batch": ("pod", "data"),
+    "cache_seq": ("model",),
+    "cache_kv": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None) -> None:
+    """Install the active mesh (+ optional rule overrides) for shard()."""
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES)
+    if rules:
+        _CTX.rules.update(rules)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def get_rules() -> dict:
+    return _CTX.rules
+
+
+def resolve_pspec(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[dict] = None,
+) -> P:
+    """Logical axes -> PartitionSpec, with divisibility + axis-reuse fallback.
+
+    For each dim, the rule's mesh axes are kept only while (a) present in the
+    mesh, (b) unclaimed by an earlier dim of this tensor, and (c) the dim is
+    divisible by the product of kept axis sizes.
+    """
+    rules = rules or _CTX.rules
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            out.append(None)
+            continue
+        want = rules.get(name)
+        if want is None:
+            out.append(None)
+            continue
+        if isinstance(want, str):
+            want = (want,)
+        kept = []
+        size = 1
+        for ax in want:
+            if ax not in mesh.shape or ax in used:
+                continue
+            nxt = size * mesh.shape[ax]
+            if dim % nxt != 0:
+                continue
+            kept.append(ax)
+            size = nxt
+        for ax in kept:
+            used.add(ax)
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axis names (no-op when
+    no mesh is installed, e.g. in CPU smoke tests)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_pspec(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape, axes, mesh=None, rules=None) -> NamedSharding:
+    mesh = mesh or _CTX.mesh
+    return NamedSharding(mesh, resolve_pspec(shape, axes, mesh, rules))

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: CountSketch query (per-row estimates for a key batch).
+
+Estimating k keys needs table[r, bucket_r(key)] for every row r -- a gather on
+GPU.  TPU adaptation: the gather becomes a one-hot matmul over width blocks:
+
+    est_r  =  sum_j  onehot_j(keys) @ table[r, j*WB:(j+1)*WB]^T
+
+The key batch is sample-sized (k or Bk candidates), so the (K,) accumulator
+tile stays in VMEM across the width sweep; the table streams through once.
+The final median-over-rows is O(R*K) and runs outside the kernel (ops layer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing
+
+
+def _kernel(meta_ref, keys_ref, table_ref, out_ref, *, rows: int, width: int,
+            block_w: int, block_k: int):
+    j = pl.program_id(0)
+
+    seed = meta_ref[0].astype(jnp.uint32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...].astype(jnp.uint32)  # (1, K)
+    col0 = j * block_w
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_k, block_w), 1) + col0
+
+    ests = []
+    for r in range(rows):
+        salt = hashing.row_salt(seed, jnp.uint32(r))
+        bucket = hashing.bucket_hash(keys, salt, width)  # (1, K)
+        sign = hashing.sign_hash(keys, salt)             # (1, K)
+        onehot = (bucket.reshape(block_k, 1) == cols).astype(jnp.float32)
+        trow = table_ref[r, :].reshape(block_w, 1).astype(jnp.float32)
+        part = jax.lax.dot_general(
+            onehot, trow, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (K, 1)
+        ests.append((part.reshape(1, block_k)) * sign)
+    out_ref[...] += jnp.concatenate(ests, axis=0)  # (rows, K)
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_w", "interpret")
+)
+def countsketch_query(
+    table: jnp.ndarray,
+    keys: jnp.ndarray,
+    seed,
+    block_w: int = 2048,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-row signed bucket reads: returns (rows, k) estimates."""
+    rows, width = table.shape
+    k = keys.shape[0]
+    k_pad = _pad_to(max(k, 128), 128)
+    block_w = min(block_w, _pad_to(width, 128))
+    w_pad = _pad_to(width, block_w)
+    keys_p = jnp.pad(jnp.asarray(keys, jnp.int32).reshape(1, -1),
+                     ((0, 0), (0, k_pad - k)))
+    table_p = jnp.pad(table, ((0, 0), (0, w_pad - width)))
+    meta = jnp.array([jnp.uint32(seed).astype(jnp.int32)], jnp.int32)
+    grid = (w_pad // block_w,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, rows=rows, width=width, block_w=block_w,
+                          block_k=k_pad),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, k_pad), lambda j, *_: (0, 0)),
+                pl.BlockSpec((rows, block_w), lambda j, *_: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((rows, k_pad), lambda j, *_: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, k_pad), jnp.float32),
+        interpret=interpret,
+        name="worp_countsketch_query",
+    )(meta, keys_p, table_p)
+    return out[:, :k]
+
+
+def countsketch_estimate(table, keys, seed, interpret: bool = True):
+    """Full R.Est: median over rows (tiny; computed outside the kernel)."""
+    return jnp.median(countsketch_query(table, keys, seed,
+                                        interpret=interpret), axis=0)

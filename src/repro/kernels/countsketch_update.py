@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused p-ppswor transform + CountSketch accumulation.
+
+This is the data-plane hot spot of WORp gradient compression: one pass over
+every gradient byte, hashing each coordinate into R sketch rows.
+
+TPU adaptation (DESIGN.md Sec. 3): GPU implementations use atomicAdd scatter;
+TPUs have no atomics, so the scatter is restructured as a ONE-HOT MATMUL:
+
+    for each value block  v  (1, B)  streamed HBM -> VMEM:
+        keys    = base + global offsets           (VPU iota)
+        r_x     = Exp[1](hash(key))               (VPU, fused transform Eq. 5)
+        for each sketch row r:
+            bucket_r = hash_r(key) mod W          (VPU multiply-shift)
+            onehot   = (bucket_r == col_ids)      (B, WB)  in VREGs
+            table[r] += (sign_r * v / r_x^{1/p}) @ onehot   (MXU)
+
+The (rows, WB) table block stays resident in VMEM across the whole inner grid
+sweep (output revisiting + @pl.when init), so HBM traffic is the input stream
+plus one table write per width block -- the roofline optimum for a one-pass
+sketch up to the width-block re-read factor ceil(W / WB).
+
+Grid: (width_blocks, n_blocks), n innermost => the table block for width
+block j accumulates over all n blocks before moving on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing
+
+
+def _kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
+            block_n: int, block_w: int, p: float | None):
+    j = pl.program_id(0)  # width block
+    i = pl.program_id(1)  # value block
+
+    seed = meta_ref[0].astype(jnp.uint32)
+    tseed = meta_ref[1].astype(jnp.uint32)
+    base = meta_ref[2].astype(jnp.uint32)
+    n_valid = meta_ref[3]
+
+    @pl.when(i == 0)
+    def _init():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    vals = vals_ref[...].astype(jnp.float32)  # (1, B)
+    offs = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    valid = offs < n_valid
+    keys = base + offs.astype(jnp.uint32)
+
+    if p is not None:
+        # Fused bottom-k transform (Eq. 5): v -> v / r_x^{1/p}, r_x ~ Exp[1].
+        r_x = hashing.exp1(keys, tseed)
+        vals = vals * r_x ** jnp.float32(-1.0 / p)
+    vals = jnp.where(valid, vals, 0.0)
+
+    col0 = j * block_w
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_w), 1) + col0
+
+    contribs = []
+    for r in range(rows):
+        salt = hashing.row_salt(seed, jnp.uint32(r))
+        bucket = hashing.bucket_hash(keys, salt, width)       # (1, B)
+        sign = hashing.sign_hash(keys, salt)                  # (1, B)
+        sv = (sign * vals)                                    # (1, B)
+        onehot = (bucket.reshape(block_n, 1) == cols).astype(jnp.float32)
+        contribs.append(
+            jax.lax.dot_general(
+                sv, onehot,
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (1, WB)
+        )
+    table_ref[...] += jnp.concatenate(contribs, axis=0)  # (rows, WB)
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "width", "p", "block_n", "block_w", "interpret"),
+)
+def countsketch_update(
+    values: jnp.ndarray,
+    rows: int,
+    width: int,
+    seed,
+    p: float | None = None,
+    transform_seed=0,
+    base_key=0,
+    block_n: int = 1024,
+    block_w: int = 2048,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Sketch a dense vector segment; returns the (rows, width) table.
+
+    ``values[i]`` is the frequency of key ``base_key + i``.  With ``p`` set,
+    the p-ppswor transform is fused (gradient-compression hot path).
+    ``interpret=True`` runs the kernel body on CPU (this container); on real
+    TPU pass ``interpret=False``.
+    """
+    n = values.shape[0]
+    block_w = min(block_w, _pad_to(width, 128))
+    block_n = min(block_n, _pad_to(n, 128))
+    n_pad = _pad_to(n, block_n)
+    w_pad = _pad_to(width, block_w)
+    vals = jnp.pad(values.reshape(1, -1), ((0, 0), (0, n_pad - n)))
+    meta = jnp.array(
+        [jnp.uint32(seed).astype(jnp.int32),
+         jnp.uint32(transform_seed).astype(jnp.int32),
+         jnp.uint32(base_key).astype(jnp.int32),
+         jnp.int32(n)],
+        dtype=jnp.int32,
+    )
+    grid = (w_pad // block_w, n_pad // block_n)
+    table = pl.pallas_call(
+        functools.partial(_kernel, rows=rows, width=width, block_n=block_n,
+                          block_w=block_w, p=p),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, block_n), lambda j, i, *_: (0, i))],
+            out_specs=pl.BlockSpec((rows, block_w), lambda j, i, *_: (0, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, w_pad), jnp.float32),
+        interpret=interpret,
+        name="worp_countsketch_update",
+    )(meta, vals)
+    return table[:, :width]

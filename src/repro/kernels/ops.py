@@ -1,0 +1,51 @@
+"""jit'd public wrappers for the WORp Pallas kernels.
+
+``interpret`` defaults to the right thing for the current backend: compiled
+on TPU, interpret-mode (Python execution of the kernel body) elsewhere --
+this container is CPU-only, so tests/benches exercise interpret mode, while
+the same call sites compile to Mosaic on a real TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .countsketch_update import countsketch_update as _update
+from .countsketch_query import (
+    countsketch_query as _query,
+    countsketch_estimate as _estimate,
+)
+from .ppswor_transform import ppswor_transform as _transform
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def sketch_dense_vector(values, rows, width, seed, p=None, transform_seed=0,
+                        base_key=0, interpret=None, **kw):
+    """CountSketch of a dense vector segment (fused transform when p given)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _update(values, rows, width, seed, p=p,
+                   transform_seed=transform_seed, base_key=base_key,
+                   interpret=interpret, **kw)
+
+
+def query_rows(table, keys, seed, interpret=None, **kw):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _query(table, keys, seed, interpret=interpret, **kw)
+
+
+def estimate(table, keys, seed, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _estimate(table, keys, seed, interpret=interpret)
+
+
+def transform(keys, values, p, transform_seed, interpret=None, **kw):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _transform(keys, values, p, transform_seed, interpret=interpret,
+                      **kw)

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: standalone p-ppswor bottom-k transform (Eq. 5).
+
+Elementwise VPU kernel: val -> val / r_key^{1/p} with r = Exp[1] from the
+shared hash.  Usually fused into countsketch_update; standalone version used
+by the data pipeline (transforming element streams before any sketch) and as
+the simplest kernel for the shape/dtype sweep tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing
+
+
+def _kernel(meta_ref, keys_ref, vals_ref, out_ref, *, p: float):
+    tseed = meta_ref[0].astype(jnp.uint32)
+    keys = keys_ref[...].astype(jnp.uint32)
+    vals = vals_ref[...]
+    r = hashing.exp1(keys, tseed)
+    out_ref[...] = vals * (r ** jnp.float32(-1.0 / p)).astype(vals.dtype)
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "block_n", "interpret"))
+def ppswor_transform(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    p: float,
+    transform_seed,
+    block_n: int = 4096,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Transformed values, same shape/dtype as ``values``."""
+    n = values.shape[0]
+    block_n = min(block_n, _pad_to(n, 128))
+    n_pad = _pad_to(n, block_n)
+    keys_p = jnp.pad(jnp.asarray(keys, jnp.int32).reshape(1, -1),
+                     ((0, 0), (0, n_pad - n)))
+    vals_p = jnp.pad(values.reshape(1, -1), ((0, 0), (0, n_pad - n)))
+    meta = jnp.array([jnp.uint32(transform_seed).astype(jnp.int32)], jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_kernel, p=p),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_pad // block_n,),
+            in_specs=[
+                pl.BlockSpec((1, block_n), lambda i, *_: (0, i)),
+                pl.BlockSpec((1, block_n), lambda i, *_: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((1, block_n), lambda i, *_: (0, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), values.dtype),
+        interpret=interpret,
+        name="worp_ppswor_transform",
+    )(meta, keys_p, vals_p)
+    return out[0, :n]

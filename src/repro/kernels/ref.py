@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its oracle here (assert_allclose in
+tests, swept over shapes/dtypes, with the kernel run in interpret mode).
+The oracles share the hash functions with ``repro.core.hashing`` so the
+kernels are drop-in replacements for the core library's sketch ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+def ppswor_transform_ref(keys: jnp.ndarray, values: jnp.ndarray, p: float,
+                         seed) -> jnp.ndarray:
+    """Oracle for the fused hash -> Exp[1] -> scale transform (Eq. 5)."""
+    r = hashing.exp1(keys, seed)
+    return values * r.astype(values.dtype) ** jnp.asarray(-1.0 / p,
+                                                          values.dtype)
+
+
+def countsketch_update_ref(
+    values: jnp.ndarray,  # (n,) dense vector segment; keys are base+arange
+    base_key: int,
+    rows: int,
+    width: int,
+    seed,
+    p: float | None = None,
+    transform_seed=None,
+) -> jnp.ndarray:
+    """Oracle CountSketch table of a dense vector segment.
+
+    If ``p`` is given, the p-ppswor transform is fused (the gradient
+    compression hot path); otherwise raw values are sketched.
+    Returns (rows, width) float32.
+    """
+    n = values.shape[0]
+    keys = jnp.asarray(base_key, jnp.uint32) + jnp.arange(n, dtype=jnp.uint32)
+    vals = values.astype(jnp.float32)
+    if p is not None:
+        vals = ppswor_transform_ref(keys, vals, p, transform_seed)
+
+    def one_row(r):
+        salt = hashing.row_salt(seed, r)
+        b = hashing.bucket_hash(keys, salt, width)
+        s = hashing.sign_hash(keys, salt)
+        return jax.ops.segment_sum(s * vals, b, num_segments=width)
+
+    return jax.vmap(one_row)(jnp.arange(rows, dtype=jnp.uint32))
+
+
+def countsketch_query_ref(
+    table: jnp.ndarray,  # (rows, width)
+    keys: jnp.ndarray,   # (k,) int/uint32
+    seed,
+) -> jnp.ndarray:
+    """Oracle per-row estimates (rows, k): sign * bucket value."""
+    rows, width = table.shape
+
+    def one_row(r):
+        salt = hashing.row_salt(seed, r)
+        b = hashing.bucket_hash(keys, salt, width)
+        s = hashing.sign_hash(keys, salt)
+        return table[r, b] * s
+
+    return jax.vmap(one_row)(jnp.arange(rows, dtype=jnp.uint32))
+
+
+def countsketch_estimate_ref(table, keys, seed):
+    """Median-of-rows estimate (the full R.Est)."""
+    return jnp.median(countsketch_query_ref(table, keys, seed), axis=0)

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import/init: device count locks on first use.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the step function is jitted against ShapeDtypeStruct inputs
+carrying production NamedShardings, .lower().compile()'d for the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh, and the compiled artifact's
+memory_analysis / cost_analysis / collective schedule is recorded for the
+roofline report (EXPERIMENTS.md SS Dry-run / SS Roofline).
+
+Usage:
+  python -m repro.launch.dryrun                      # full sweep (resumable)
+  python -m repro.launch.dryrun --arch gemma2_2b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --rules wedge        # perf-variant lowering
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_NAMES, SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.roofline import analyzer
+from repro.train import steps
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+RULE_VARIANTS = {
+    "baseline": {},
+    # perf-iteration variants (SS Perf): see EXPERIMENTS.md
+    "qpar": {"act_q_blocks": ("model",)},        # context-parallel attention
+    # iteration 2 on the prefill cell: context-parallel attention + TP-only
+    # weights (no FSDP -- serving has no optimizer state, so replicating
+    # params over 'data' removes the per-matmul contraction psums)
+    "qpar_nofsdp": {"act_q_blocks": ("model",), "embed": None},
+    # decode: weights stay fully sharded (embed over data, TP over model);
+    # activations replicate batch and shard d_model over data instead, so
+    # matmul contractions psum small activations rather than all-gathering
+    # weights.  The KV cache keeps its own batch sharding (cache_batch).
+    "decode_tp": {"act_batch": None, "act_embed": ("data",)},
+    "cache_data": {"cache_seq": ("data", "model")},
+    "no_fsdp": {"embed": None},
+    # WORp-compressed DP (hillclimb cell 3): params TP-only (replicated over
+    # data -- compression replaces the dense DP gradient all-reduce), no
+    # batch constraints inside the manual-data shard_map
+    "compressed": {"embed": None, "act_batch": None},
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules: str = "baseline", wedge: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports(shape):
+        return None, "skipped (documented: needs sub-quadratic attention)"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shd.set_mesh(mesh, RULE_VARIANTS[rules])
+    from repro.models import layers as _L
+    _L.set_attn_variant(q_parallel=rules.startswith("qpar"))
+    batch = M.input_specs(cfg, shape, mesh=mesh)
+
+    if shape.kind == "train":
+        params = M.abstract_params(cfg, mesh)
+        opt = adamw.abstract_state(params)
+        if rules == "compressed":
+            return _lower_compressed(cfg, shape, mesh, params, opt), None
+        state = steps.TrainState(params=params, opt=opt)
+
+        def fn(state, batch):
+            return steps.train_step(state, batch, cfg, wedge=wedge)
+
+        lowered = jax.jit(fn).lower(state, batch)
+    elif shape.kind == "prefill":
+        params = M.abstract_params(cfg, mesh)
+
+        def fn(params, batch):
+            return steps.serve_prefill(params, batch, cfg, wedge=wedge)
+
+        lowered = jax.jit(fn).lower(params, batch)
+    else:  # decode
+        params = M.abstract_params(cfg, mesh)
+
+        def fn(params, batch):
+            return steps.serve_step(params, batch, cfg)
+
+        lowered = jax.jit(fn).lower(params, batch)
+    return lowered, None
+
+
+def _lower_compressed(cfg, shape, mesh, params, opt):
+    """Lower the WORp-compressed train step (shard_map manual-data, auto
+    model axis; per-worker EF stacked on the data axis)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.optim import gradcomp
+
+    dp = tuple(ax for ax in ("pod", "data") if ax in mesh.shape)
+    D = 1
+    for ax in dp:
+        D *= mesh.shape[ax]
+    cc = gradcomp.CompressorConfig(k=4096, rows=7, width=31 * 4096,
+                                   candidates=512, p=1.0, mode="twopass")
+
+    def err_like(pspec_leaf):
+        sh = pspec_leaf.sharding.spec
+        new_spec = P(dp, *sh)
+        return jax.ShapeDtypeStruct(
+            (D,) + pspec_leaf.shape, jnp.float32,
+            sharding=NamedSharding(mesh, new_spec))
+
+    error = jax.tree_util.tree_map(err_like, params)
+    state = steps.CompressedTrainState(params=params, opt=opt, error=error)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=NamedSharding(mesh, P(dp))),
+        "labels": jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=NamedSharding(mesh, P(dp))),
+    }
+    step = steps.make_compressed_train_step_tp(cfg, mesh, cc, dp_axes=dp)
+    return jax.jit(step).lower(state, batch)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: str = "baseline", wedge: bool = False,
+             verbose: bool = True, cost_pass: bool = None):
+    """Compile one cell.
+
+    Single-pod (roofline) cells run THREE lowerings: the deploy program
+    (memory analysis + the shipping artifact) and two cost-mode programs
+    (dense attention, layer scan at unroll 1 and unroll u) whose delta
+    corrects XLA's count-loop-bodies-once flop/byte/collective accounting
+    (see repro.roofline.analyzer).  Multi-pod cells compile the deploy
+    program only (the existence proof that the pod axis shards).
+    """
+    from repro.models import layers as L
+
+    mesh_name = "multi" if multi_pod else "single"
+    chips = 512 if multi_pod else 256
+    if cost_pass is None:
+        cost_pass = not multi_pod
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+
+    t0 = time.time()
+    lowered, skip = lower_cell(arch, shape_name, multi_pod, rules, wedge)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": skip}
+    compiled = lowered.compile()
+    if verbose:
+        print(compiled.memory_analysis())
+
+    if cost_pass:
+        T = analyzer.scan_trip_count(cfg)
+        u = analyzer.unroll_factor(T)
+        try:
+            L.set_cost_mode(dense_attn=True, unroll=1)
+            c1 = lower_cell(arch, shape_name, multi_pod, rules,
+                            wedge)[0].compile()
+            m1 = analyzer.extract_metrics(c1)
+            del c1
+            L.set_cost_mode(dense_attn=True, unroll=u)
+            cu = lower_cell(arch, shape_name, multi_pod, rules,
+                            wedge)[0].compile()
+            mu = analyzer.extract_metrics(cu)
+            del cu
+        finally:
+            L.set_cost_mode(dense_attn=False, unroll=1)
+        metrics = analyzer.combine_loop_costs(m1, mu, u, T)
+        roof = analyzer.analyze_corrected(
+            compiled, metrics, arch, shape, mesh_name, chips,
+            M.active_param_count(cfg),
+            note=f"rules={rules} wedge={wedge} loop-corrected u={u} T={T}")
+    else:
+        roof = analyzer.analyze(
+            compiled, arch, shape, mesh_name, chips,
+            M.active_param_count(cfg),
+            note=f"rules={rules} wedge={wedge} RAW (loop bodies once)")
+    dt = time.time() - t0
+    if verbose:
+        print(analyzer.summarize(roof), f" [total {dt:.1f}s]")
+    rec = json.loads(roof.to_json())
+    rec.update(status="ok", compile_seconds=dt, rules=rules, wedge=wedge,
+               cost_corrected=cost_pass)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_NAMES) + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="baseline",
+                    choices=list(RULE_VARIANTS))
+    ap.add_argument("--wedge", action="store_true",
+                    help="causal block-triangular attention (perf variant)")
+    ap.add_argument("--out", default=RESULT_DIR)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                if args.rules != "baseline" or args.wedge:
+                    tag += f"__{args.rules}{'__wedge' if args.wedge else ''}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] {tag}: cached")
+                    continue
+                print(f"[dryrun] {tag}: lowering...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi, args.rules,
+                                   args.wedge)
+                except Exception as e:  # noqa: BLE001 -- record, keep going
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        return 1
+    print("[dryrun] all requested cells done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

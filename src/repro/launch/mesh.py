@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+single pod : (16, 16)    axes (data, model)   = 256 chips (one v5e pod)
+multi pod  : (2, 16, 16) axes (pod, data, model) = 512 chips
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (smoke tests / examples)."""
+    n = len(jax.devices())
+    mp = model_parallel if n % max(model_parallel, 1) == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,66 @@
+"""Serving launcher: prefill a batch of prompts, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma_9b \
+        --reduced --tokens 16
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_NAMES, get_config
+from repro.models import model as M
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.family == "encdec":
+        raise SystemExit("use the enc-dec driver in examples/ for seamless")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size, jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.num_patches, cfg.d_model),
+            jnp.float32).astype(jnp.bfloat16) * 0.02
+    logits, cache = jax.jit(
+        lambda p, b: T.forward_prefill(p, b, cfg))(params, batch)
+    # grow dense kv caches by the decode budget
+    full = S + args.tokens + (cfg.num_patches if cfg.family == "vlm" else 0)
+
+    def grow(x):
+        if x.ndim >= 4 and x.shape[2] in (S, S + cfg.num_patches):
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, full - x.shape[2])
+            return jnp.pad(x, pad)
+        return x
+    cache = jax.tree_util.tree_map(grow, cache)
+    step = jax.jit(lambda p, b: T.forward_decode(p, b, cfg))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    pos0 = S + (cfg.num_patches if cfg.family == "vlm" else 0)
+    outs = [np.asarray(tok)]
+    for i in range(args.tokens):
+        lg, cache = step(params, {"token": tok, "pos": jnp.int32(pos0 + i),
+                                  "cache": cache})
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        outs.append(np.asarray(tok))
+    print("generated ids:")
+    for row in np.concatenate(outs, axis=1):
+        print(" ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2_13b \
+        --steps 100 --reduced [--compressed] [--ckpt DIR]
+
+``--reduced`` runs the CPU-sized config (this container); on a TPU cluster
+drop it and point --mesh at the production topology (the dry-run proves all
+10 archs lower+compile on the (pod, data, model) mesh).
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ARCH_NAMES, get_config
+from repro.optim import gradcomp
+from repro.train import loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--compressed", action="store_true",
+                    help="WORp-compressed DP gradients")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = None
+    cc = None
+    if args.compressed:
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        cc = gradcomp.CompressorConfig()
+    out = loop.run_training(
+        cfg, num_steps=args.steps, batch=args.batch, seq=args.seq,
+        lr=args.lr, ckpt_dir=args.ckpt, compressed=args.compressed,
+        cc=cc, mesh=mesh)
+    print(f"done: final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,390 @@
+"""Shared neural net building blocks (pure JAX, no framework deps).
+
+Attention comes in four flavors used across the 10 assigned archs:
+  * blockwise_attention -- memory-efficient online-softmax attention
+    (train/prefill; causal, bidirectional, or sliding-window via masks)
+  * decode_attention    -- one new query vs. a full KV cache
+  * ring buffer helpers -- bounded caches for local-attention layers
+All softmax math in float32; logit softcapping (gemma2) supported.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+_NEG_INF = jnp.float32(-1e30)
+
+# Cost-mode context (set by the dry-run only): dense_attn replaces the
+# blockwise kv/q loops with one masked einsum so XLA's cost_analysis counts
+# attention flops exactly (while-loop bodies are otherwise counted ONCE,
+# not x trip-count).  unroll>1 unrolls the layer scans for the same reason
+# (see repro.roofline.analyzer: the u1/u2 delta formula).
+_COST_MODE = {"dense_attn": False, "unroll": 1}
+
+
+def set_cost_mode(dense_attn: bool = False, unroll: int = 1):
+    _COST_MODE["dense_attn"] = dense_attn
+    _COST_MODE["unroll"] = unroll
+
+
+def cost_unroll() -> int:
+    return _COST_MODE["unroll"]
+
+
+# Perf-variant context: q_parallel batches the q-block loop into a tensor
+# dimension constrained on the 'act_q_blocks' logical axis -- context
+# parallelism for archs whose head count does not divide the model axis
+# (qwen 40H, phi4 24H, gemma2 8H on a 16-way axis would otherwise replicate
+# ALL attention compute).  Set by the dry-run perf variants.
+_ATTN_VARIANT = {"q_parallel": False}
+
+
+def set_attn_variant(q_parallel: bool = False):
+    _ATTN_VARIANT["q_parallel"] = q_parallel
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+            zero_centered: bool = True) -> jnp.ndarray:
+    """RMSNorm; gemma-style (1 + w) scaling when zero_centered."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    scale = (1.0 + w) if zero_centered else w
+    return (normed * scale).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.asarray(cap, x.dtype) * jnp.tanh(x / jnp.asarray(cap, x.dtype))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10_000.0) -> jnp.ndarray:
+    """Rotary embedding.  x (..., S, H, dh); positions (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(
+        jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _band_mask(qpos, kpos, causal: bool, window: int):
+    """(qb, kvb) bool mask: causal and/or sliding-window band."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+def blockwise_attention(
+    q: jnp.ndarray,   # (B, Sq, H, dh)
+    k: jnp.ndarray,   # (B, Skv, Kh, dh)
+    v: jnp.ndarray,   # (B, Skv, Kh, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    logit_cap: float = 0.0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    q_offset: int = 0,
+    wedge: bool = False,
+) -> jnp.ndarray:
+    """Online-softmax blockwise attention (FlashAttention dataflow in XLA).
+
+    Memory: O(q_block * kv_block) scores per step instead of O(Sq * Skv).
+    ``wedge=True`` iterates only the lower-triangular block pairs (causal),
+    eliminating the ~2x masked-flops waste -- the beyond-paper perf variant;
+    the baseline scans the full rectangle with masking.
+    """
+    B, Sq, H, dh = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = dh ** -0.5
+
+    q5 = q.reshape(B, nq, q_block, Kh, G, dh)
+    k4 = k.reshape(B, nk, kv_block, Kh, dh)
+    v4 = v.reshape(B, nk, kv_block, Kh, dh)
+
+    if _COST_MODE["dense_attn"]:
+        # cost mode wins (exact flop counting); the q_parallel sharding is
+        # reproduced inside _dense_attention via the same logical axis
+        return _dense_attention(q, k, v, causal=causal, window=window,
+                                logit_cap=logit_cap, q_offset=q_offset)
+
+    if _ATTN_VARIANT["q_parallel"] and Sq > q_block:
+        return _qparallel_attention(q5, k4, v4, scale, causal, window,
+                                    logit_cap, q_offset)
+
+    if wedge and causal and window == 0 and Sq == Skv and q_block == kv_block:
+        return _wedge_attention(q5, k4, v4, scale, logit_cap, q_offset)
+
+    def q_step(qi):
+        qb_ = jax.lax.dynamic_index_in_dim(q5, qi, 1, keepdims=False)
+
+        def kv_step(carry, operand):
+            m, l, acc = carry  # (B,Kh,G,qb), (B,Kh,G,qb), (B,Kh,G,qb,dh)
+            kb, vb, kj = operand
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qb_.astype(jnp.float32),
+                kb.astype(jnp.float32)) * scale
+            if logit_cap:
+                s = softcap(s, logit_cap)
+            qpos = q_offset + qi * q_block + jnp.arange(q_block)
+            kpos = kj * kv_block + jnp.arange(kv_block)
+            mask = _band_mask(qpos, kpos, causal, window)
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            # PV matmul in the value dtype (f32 accumulate) -- halves the
+            # dominant backward residual vs an f32 p matrix
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(v.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        # flash-style recompute: never save s/p for backward, re-derive them
+        # block-by-block (the carried (m, l, acc) chain is what's kept)
+        kv_step = jax.checkpoint(kv_step, prevent_cse=False)
+
+        init = (
+            jnp.full((B, Kh, G, q_block), _NEG_INF, jnp.float32),
+            jnp.zeros((B, Kh, G, q_block), jnp.float32),
+            jnp.zeros((B, Kh, G, q_block, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.moveaxis(k4, 1, 0), jnp.moveaxis(v4, 1, 0), jnp.arange(nk)))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    outs = jax.lax.map(q_step, jnp.arange(nq))  # (nq,B,Kh,G,qb,dh)
+    out = jnp.moveaxis(outs, 0, 1)  # (B,nq,Kh,G,qb,dh)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5))  # (B,nq,qb,Kh,G,dh)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def _qparallel_attention(q5, k4, v4, scale, causal, window, logit_cap,
+                         q_offset):
+    """Context-parallel blockwise attention: q blocks as a SHARDED tensor dim.
+
+    The q-block loop becomes a batch dimension constrained on the model axis
+    ('act_q_blocks'); the kv scan runs once with all (local) q blocks batched.
+    k/v are replicated (GSPMD all-gathers them once per layer) while scores
+    and outputs stay q-sharded -- 16x less attention compute per device than
+    the replicated-head fallback, at the price of a k/v all-gather.
+    """
+    from repro.distributed.sharding import shard as _shard
+
+    B, nq, qb, Kh, G, dh = q5.shape
+    nk, kvb = k4.shape[1], k4.shape[2]
+    q5 = _shard(q5, "act_batch", "act_q_blocks", None, None, None, None)
+
+    def kv_step(carry, operand):
+        m, l, acc = carry  # (B,nq,Kh,G,qb) x2, (B,nq,Kh,G,qb,dh)
+        kb, vb, kj = operand
+        s = jnp.einsum("bnqkgd,bskd->bnkgqs", q5.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        if logit_cap:
+            s = softcap(s, logit_cap)
+        qpos = (q_offset + jnp.arange(nq)[:, None] * qb
+                + jnp.arange(qb)[None, :])              # (nq, qb)
+        kpos = kj * kvb + jnp.arange(kvb)
+        mask = jnp.ones((nq, qb, kvb), bool)
+        if causal:
+            mask &= kpos[None, None, :] <= qpos[:, :, None]
+        if window > 0:
+            mask &= kpos[None, None, :] > (qpos[:, :, None] - window)
+        s = jnp.where(mask[None, :, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bnkgqs,bskd->bnkgqd", p.astype(v4.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    kv_step = jax.checkpoint(kv_step, prevent_cse=False)
+    init = (
+        jnp.full((B, nq, Kh, G, qb), _NEG_INF, jnp.float32),
+        jnp.zeros((B, nq, Kh, G, qb), jnp.float32),
+        jnp.zeros((B, nq, Kh, G, qb, dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step, init,
+        (jnp.moveaxis(k4, 1, 0), jnp.moveaxis(v4, 1, 0), jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,nq,Kh,G,qb,dh)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5))  # (B,nq,qb,Kh,G,dh)
+    return out.reshape(B, nq * qb, Kh * G, dh).astype(q5.dtype)
+
+
+def _dense_attention(q, k, v, *, causal, window, logit_cap, q_offset):
+    """Reference attention with the full (Sq, Skv) score matrix.
+
+    Used by cost-mode lowering (exact flop accounting) and by small-shape
+    tests; numerically equivalent to blockwise_attention.
+    """
+    B, Sq, H, dh = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    q4 = q.reshape(B, Sq, Kh, G, dh)
+    if _ATTN_VARIANT["q_parallel"]:
+        from repro.distributed.sharding import shard as _shard
+        q4 = _shard(q4, "act_batch", "act_q_blocks", None, None, None)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q4.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    if logit_cap:
+        s = softcap(s, logit_cap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = _band_mask(qpos, kpos, causal, window)
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = jnp.transpose(o, (0, 3, 1, 2, 4))  # (B,Sq,Kh,G,dh)
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def _wedge_attention(q5, k4, v4, scale, logit_cap, q_offset):
+    """Causal attention over ONLY the lower-triangular block pairs.
+
+    Iterates the T(T+1)/2 valid (qi, kj) pairs in one scan, carrying the
+    online-softmax state of every q block.  HLO flops match the causal
+    minimum (the masked-rectangle baseline does ~2x).
+    """
+    B, nq, qb, Kh, G, dh = q5.shape
+    nk = k4.shape[1]
+    assert nq == nk
+    # flattened lower-triangular (qi, kj) pairs, kj <= qi
+    import numpy as np
+    pairs = np.array([(i, j) for i in range(nq) for j in range(i + 1)],
+                     np.int32)
+
+    def step(carry, pair):
+        m, l, acc = carry  # (nq,B,Kh,G,qb), ..., (nq,B,Kh,G,qb,dh)
+        qi, kj = pair[0], pair[1]
+        qb_ = jax.lax.dynamic_index_in_dim(q5, qi, 1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(k4, kj, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(v4, kj, 1, keepdims=False)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb_.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        if logit_cap:
+            s = softcap(s, logit_cap)
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+        kpos = kj * qb + jnp.arange(qb)
+        s = jnp.where((kpos[None, :] <= qpos[:, None])[None, None, None], s,
+                      _NEG_INF)
+        mi = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + p.sum(axis=-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    init = (
+        jnp.full((nq, B, Kh, G, qb), _NEG_INF, jnp.float32),
+        jnp.zeros((nq, B, Kh, G, qb), jnp.float32),
+        jnp.zeros((nq, B, Kh, G, qb, dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.asarray(pairs))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (nq,B,Kh,G,qb,dh)
+    out = jnp.transpose(out, (1, 0, 4, 2, 3, 5))  # (B,nq,qb,Kh,G,dh)
+    return out.reshape(B, nq * qb, Kh * G, dh).astype(q5.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, 1, H, dh) -- one new query
+    k_cache: jnp.ndarray,  # (B, S, Kh, dh)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,      # scalar int32: index of the new token
+    *,
+    window: int = 0,       # >0: cache is a ring buffer of this size
+    logit_cap: float = 0.0,
+) -> jnp.ndarray:
+    B, _, H, dh = q.shape
+    S, Kh = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    scale = dh ** -0.5
+    q_ = q.reshape(B, Kh, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", q_,
+                   k_cache.astype(jnp.float32)) * scale
+    if logit_cap:
+        s = softcap(s, logit_cap)
+    if window > 0:
+        valid = jnp.arange(S) < jnp.minimum(pos + 1, S)  # ring buffer
+    else:
+        valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def cache_insert(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
+                 window: int = 0) -> jnp.ndarray:
+    """Insert (B, 1, Kh, dh) at position pos (ring-buffer slot if window)."""
+    slot = jnp.where(window > 0, pos % jnp.maximum(cache.shape[1], 1), pos)
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype), (0, slot.astype(jnp.int32), 0, 0))
+
+
+# ---------------------------------------------------------------------------
+# projections / mlp
+# ---------------------------------------------------------------------------
+
+def attn_qkv(xn, w):
+    """x (B,S,D) @ w (D,H,dh) -> (B,S,H,dh), + optional bias."""
+    out = jnp.einsum("bsd,dhk->bshk", xn, w["w"])
+    if "b" in w:
+        out = out + w["b"]
+    return out
+
+
+def attn_out(o, wo):
+    """(B,S,H,dh) @ (H,dh,D) -> (B,S,D)."""
+    return jnp.einsum("bshk,hkd->bsd", o, wo)
+
+
+def swiglu(xn, wg, wi, wo):
+    h = silu(jnp.einsum("bsd,df->bsf", xn, wg)) * jnp.einsum(
+        "bsd,df->bsf", xn, wi)
+    h = shard(h, "act_batch", "act_seq", "act_mlp")
+    return jnp.einsum("bsf,fd->bsd", h, wo)
+
+
+def gelu_mlp(xn, wi, wo):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xn, wi))
+    h = shard(h, "act_batch", "act_seq", "act_mlp")
+    return jnp.einsum("bsf,fd->bsd", h, wo)

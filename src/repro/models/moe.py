@@ -1,0 +1,79 @@
+"""Token-choice top-k MoE (GShard-style, capacity-bounded, TPU-native).
+
+Dispatch keeps the batch ("row") dimension so position-in-expert cumsums stay
+LOCAL to each batch shard -- no cross-device collectives in the routing math
+itself; the expert einsums are sharded over the model axis (expert dim when
+divisible, expert-mlp dim otherwise -- grok-1 has E=8 < 16-way model axis).
+
+Scatter/gather are expressed through unique-slot .at[].set / take, which XLA
+lowers to efficient dynamic-scatter on TPU (no atomics needed: slots are
+unique by construction of the cumsum).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .layers import silu
+
+
+def moe_ffn(x: jnp.ndarray, mp: dict, num_experts: int, top_k: int,
+            capacity_factor: float) -> jnp.ndarray:
+    """x (B, S, D) -> (B, S, D) through top-k of E experts (SwiGLU experts).
+
+    mp: router (D, E), wg (E, D, F), wi (E, D, F), wo (E, F, D).
+    """
+    B, S, D = x.shape
+    E, K = num_experts, top_k
+    cap = int((S * K / E) * capacity_factor + 1)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        mp["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-row dispatch: position of each (token, choice) in its expert ---
+    oh = jax.nn.one_hot(expert_idx.reshape(B, S * K), E,
+                        dtype=jnp.int32)            # (B, S*K, E)
+    pos_in_e = jnp.cumsum(oh, axis=1) - 1            # (B, S*K, E)
+    pos = jnp.sum(pos_in_e * oh, axis=-1)            # (B, S*K)
+    e_flat = expert_idx.reshape(B, S * K)
+    ok = pos < cap
+    slot = jnp.where(ok, e_flat * cap + pos, E * cap)  # overflow -> dropped
+
+    x_rep = jnp.repeat(x, K, axis=1)                 # (B, S*K, D)
+    buf = jnp.zeros((B, E * cap + 1, D), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, x_rep)
+    h = buf[:, : E * cap].reshape(B, E, cap, D)
+    h = shard(h, "act_batch", "act_experts", None, None)
+
+    # --- expert SwiGLU (batched over E; sharded over model axis) ---
+    a = silu(jnp.einsum("becd,edf->becf", h, mp["wg"])) * jnp.einsum(
+        "becd,edf->becf", h, mp["wi"])
+    a = shard(a, "act_batch", "act_experts", None, "act_mlp")
+    y = jnp.einsum("becf,efd->becd", a, mp["wo"])    # (B,E,cap,D)
+
+    # --- combine back ---
+    y_flat = jnp.concatenate(
+        [y.reshape(B, E * cap, D),
+         jnp.zeros((B, 1, D), y.dtype)], axis=1)
+    y_rep = jax.vmap(lambda f, s: f[s])(y_flat, slot)  # (B, S*K, D)
+    y_tok = (y_rep.reshape(B, S, K, D) *
+             gate_vals[..., None].astype(y_rep.dtype) *
+             ok.reshape(B, S, K, 1).astype(y_rep.dtype))
+    return y_tok.sum(axis=2)
+
+
+def aux_load_balance_loss(x, router, num_experts: int, top_k: int):
+    """Switch-style load-balance auxiliary loss (fraction * prob per expert)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, num_experts, dtype=jnp.float32),
+                    axis=(0, 1, 2))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    return num_experts * jnp.sum(frac * pmean)

@@ -1,0 +1,87 @@
+"""Parameter declaration: shapes + logical sharding axes + initializers.
+
+Each model declares a pytree of ``PD`` (param definitions).  From that one
+tree we derive (a) abstract ShapeDtypeStructs for the dry-run, (b) concrete
+initialized arrays for smoke tests/examples, and (c) PartitionSpecs via the
+logical-axis rules in ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding
+
+
+class PD(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | scaled | ssm_a | dt_bias
+
+    def __repr__(self):
+        return f"PD{self.shape}@{self.axes}"
+
+
+def _is_pd(x) -> bool:
+    return isinstance(x, PD)
+
+
+def tree_map_pd(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_pd)
+
+
+def abstract(tree, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs (no allocation) -- the dry-run path."""
+    def mk(pd: PD):
+        return jax.ShapeDtypeStruct(pd.shape, dtype)
+    return tree_map_pd(mk, tree)
+
+
+def abstract_sharded(tree, mesh, dtype=jnp.bfloat16, rules=None):
+    """ShapeDtypeStructs WITH NamedSharding attached (for .lower())."""
+    def mk(pd: PD):
+        ns = sharding.named_sharding(pd.shape, pd.axes, mesh, rules)
+        return jax.ShapeDtypeStruct(pd.shape, dtype, sharding=ns)
+    return tree_map_pd(mk, tree)
+
+
+def pspecs(tree, mesh, rules=None):
+    def mk(pd: PD):
+        return sharding.resolve_pspec(pd.shape, pd.axes, mesh, rules)
+    return tree_map_pd(mk, tree)
+
+
+def initialize(tree, key: jax.Array, dtype=jnp.bfloat16):
+    """Concrete init (smoke tests / examples; small configs only)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_pd)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(pd: PD, k):
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, dtype)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, dtype)
+        if pd.init == "ssm_a":  # A_log in [0, ~log16]
+            return jnp.log(
+                jax.random.uniform(k, pd.shape, jnp.float32, 1.0, 16.0)
+            ).astype(dtype)
+        if pd.init == "dt_bias":
+            return jnp.log(
+                jnp.expm1(jax.random.uniform(k, pd.shape, jnp.float32,
+                                             1e-3, 1e-1))
+            ).astype(dtype)
+        fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, pd.shape, jnp.float32) * scale).astype(
+            dtype)
+
+    init_leaves = [mk(pd, k) for pd, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, init_leaves)
+
+
+def count(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=_is_pd)
+    return int(sum(int(np.prod(pd.shape)) for pd in leaves))

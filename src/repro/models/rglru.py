@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Recurrence:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+  a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+  r_t = sigmoid(W_a x_t + b_a)   (recurrence gate)
+  i_t = sigmoid(W_x x_t + b_x)   (input gate)
+
+Gates use diagonal (per-channel) linears -- a simplification of Griffin's
+block-diagonal heads noted in DESIGN.md Sec. 9.  Train/prefill runs a
+parallel associative scan; decode is the O(1) step.  The block wraps the
+recurrence with in-proj branches, a width-4 causal conv, and an output gate,
+following the Griffin recurrent-block layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .layers import silu
+
+_C = 8.0
+
+
+def _gates(x, lp):
+    """x (B,S,W) -> (log_a, gated_input) with diagonal gate linears."""
+    r = jax.nn.sigmoid(x.astype(jnp.float32) * lp["w_a"].astype(jnp.float32)
+                       + lp["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x.astype(jnp.float32) * lp["w_x"].astype(jnp.float32)
+                       + lp["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, mult * i * x.astype(jnp.float32)
+
+
+def rglru_scan(x, lp, h0=None):
+    """Parallel linear-recurrence scan.  x (B,S,W) -> (y, h_final)."""
+    a, b = _gates(x, lp)
+    if h0 is not None:
+        # fold the carried state in as an extra leading step
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(x, lp, h):
+    """One decode step.  x (B,1,W), h (B,W)."""
+    a, b = _gates(x, lp)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def _causal_conv(x, conv_w, conv_state=None):
+    """Depthwise causal conv1d (K, W).  Returns (y, new_state (B,K-1,W))."""
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * conv_w[i] for i in range(K))
+    return y, xp[:, -(K - 1):]
+
+
+def recurrent_block(x, lp, mode: str, state=None):
+    """Griffin recurrent block.  x (B,S,D) -> (y, new_state).
+
+    lp: in_x (D,W), in_g (D,W), conv (K,W), w_a/b_a/w_x/b_x/lam (W,),
+        out (W,D).
+    state: dict(conv (B,K-1,W), h (B,W)) for decode / chunked prefill.
+    """
+    xb = jnp.einsum("bsd,dw->bsw", x, lp["in_x"])
+    gb = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, lp["in_g"]))
+    xb = shard(xb, "act_batch", "act_seq", "act_lru")
+
+    conv_state = state["conv"] if state is not None else None
+    xb, new_conv = _causal_conv(xb, lp["conv"], conv_state)
+
+    if mode == "decode":
+        y, h_new = rglru_step(xb, lp, state["h"])
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_new = rglru_scan(xb, lp, h0)
+
+    out = jnp.einsum("bsw,wd->bsd", y * gb, lp["out"])
+    return out, {"conv": new_conv, "h": h_new}

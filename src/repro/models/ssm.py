@@ -1,0 +1,186 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: within chunks the recurrence is computed in its dual
+quadratic-attention form (MXU-friendly batched matmuls); across chunks a
+linear scan carries the (H, P, N) state.  Decode is the O(1) recurrent step.
+
+Shapes: x (B, S, D); d_inner = expand*D; H = d_inner/headdim heads of P =
+headdim channels; N = ssm_state; G = ssm_groups (shared B/C like GQA).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .layers import rmsnorm, silu
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    nheads: int
+    headdim: int
+    d_state: int
+    ngroups: int
+    d_conv: int
+
+    @property
+    def conv_dim(self):
+        return self.d_inner + 2 * self.ngroups * self.d_state
+
+    @property
+    def in_proj_dim(self):
+        # [z (gate), x, B, C, dt]
+        return 2 * self.d_inner + 2 * self.ngroups * self.d_state + self.nheads
+
+
+def dims_from_config(cfg) -> SSMDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return SSMDims(
+        d_inner=d_inner,
+        nheads=d_inner // cfg.ssm_headdim,
+        headdim=cfg.ssm_headdim,
+        d_state=cfg.ssm_state,
+        ngroups=cfg.ssm_groups,
+        d_conv=cfg.ssm_conv,
+    )
+
+
+def _split_proj(zxbcdt, dims: SSMDims):
+    d, g, n, h = dims.d_inner, dims.ngroups, dims.d_state, dims.nheads
+    z = zxbcdt[..., :d]
+    xBC = zxbcdt[..., d: d + dims.conv_dim]
+    dt = zxbcdt[..., d + dims.conv_dim:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_state=None):
+    """Depthwise causal conv1d, width K.  xBC (B, S, C); conv_w (K, C).
+
+    Returns (out, new_conv_state) where conv_state is the last K-1 inputs.
+    """
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i: i + xBC.shape[1]] * conv_w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, B_, C_, D_, dims: SSMDims, chunk: int = 128,
+                initial_state=None):
+    """Chunked SSD scan.
+
+    x (B,S,H,P); dt (B,S,H) (softplus'd); A (H,) negative; B_/C_ (B,S,G,N).
+    Returns y (B,S,H,P), final_state (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    nc = S // chunk
+    rep = H // G
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = B_.reshape(Bsz, nc, chunk, G, N)
+    Cc = C_.reshape(Bsz, nc, chunk, G, N)
+
+    dA = dtc * A  # (B,nc,Q,H) negative increments
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    # ---- intra-chunk (dual quadratic form) ----
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    Lmat = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], Lmat, 0.0)
+    scores = jnp.einsum("bcign,bcjgn->bcijg", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))  # (B,nc,Qi,Qj,G)
+    scores = jnp.repeat(scores, rep, axis=-1)  # -> (B,nc,Qi,Qj,H)
+    M = scores * Lmat * dtc[:, :, None, :, :]  # weight dt_j
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, xc.astype(jnp.float32))
+
+    # ---- chunk boundary states ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    Brep = jnp.repeat(Bc, rep, axis=3) if rep > 1 else Bc  # (B,nc,Q,H,N)
+    states = jnp.einsum(
+        "bcqhn,bcqhp->bchnp",
+        (Brep * (dtc * decay_to_end)[..., None]).astype(jnp.float32),
+        xc.astype(jnp.float32))  # (B,nc,H,N,P)
+
+    # ---- inter-chunk linear scan ----
+    def scan_fn(h, inp):
+        st, tot = inp  # (B,H,N,P), (B,H)
+        h_new = h * jnp.exp(tot)[..., None, None] + st
+        return h_new, h  # emit PREVIOUS state (state entering the chunk)
+
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((Bsz, H, N, P), jnp.float32))
+    final, prev_states = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution ----
+    Crep = jnp.repeat(Cc, rep, axis=3) if rep > 1 else Cc  # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchnp->bcqhp",
+                       (Crep * jnp.exp(cum)[..., None]).astype(jnp.float32),
+                       prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    y = y + x.astype(jnp.float32) * D_[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x, dt, A, B_, C_, D_, state):
+    """One recurrent step.  x (B,1,H,P), state (B,H,N,P) -> y, new_state."""
+    dA = jnp.exp(dt[:, 0] * A)  # (B,H)
+    Bx = jnp.einsum("bgn,bhp->bhnp", B_[:, 0].astype(jnp.float32),
+                    (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32))
+    new_state = state * dA[..., None, None] + Bx
+    y = jnp.einsum("bgn,bhnp->bhp", C_[:, 0].astype(jnp.float32), new_state)
+    y = y + x[:, 0].astype(jnp.float32) * D_[None, :, None]
+    return y[:, None].astype(x.dtype), new_state
+
+
+def mamba2_block(x, lp, cfg, mode: str, state=None):
+    """Full Mamba-2 block.  x (B,S,D).
+
+    lp: in_proj (D, in_proj_dim), conv (K, conv_dim), A_log (H,), D (H,),
+        dt_bias (H,), norm (d_inner,), out_proj (d_inner, D).
+    state: None (train/prefill from scratch) or dict(conv, ssm) for decode.
+    Returns (y, new_state).
+    """
+    dims = dims_from_config(cfg)
+    Bsz, S, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, lp["in_proj"])
+    z, xBC, dt_raw = _split_proj(zxbcdt, dims)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))  # (H,)
+
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = _causal_conv(xBC, lp["conv"], conv_state)
+    xs = xBC[..., : dims.d_inner].reshape(Bsz, S, dims.nheads, dims.headdim)
+    B_ = xBC[..., dims.d_inner: dims.d_inner + dims.ngroups * dims.d_state
+             ].reshape(Bsz, S, dims.ngroups, dims.d_state)
+    C_ = xBC[..., dims.d_inner + dims.ngroups * dims.d_state:
+             ].reshape(Bsz, S, dims.ngroups, dims.d_state)
+    xs = shard(xs, "act_batch", "act_seq", "act_heads", None)
+
+    if mode == "decode":
+        y, new_ssm = ssd_decode_step(xs, dt, A, B_, C_,
+                                     lp["D"].astype(jnp.float32),
+                                     state["ssm"])
+    else:
+        chunk = min(128, S)
+        y, new_ssm = ssd_chunked(xs, dt, A, B_, C_,
+                                 lp["D"].astype(jnp.float32), dims,
+                                 chunk=chunk)
+    y = y.reshape(Bsz, S, dims.d_inner)
+    y = rmsnorm(y * silu(z), lp["norm"], zero_centered=False)
+    out = jnp.einsum("bse,ed->bsd", y, lp["out_proj"])
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,584 @@
+"""Model assembly for all 10 assigned architectures.
+
+One module builds, per ``ArchConfig``:
+  * ``param_tree(cfg)``          -- PD tree (shapes + sharding axes + init)
+  * ``cache_tree(cfg, B)``       -- PD tree for the decode KV/state caches
+  * ``forward_train(params, batch, cfg)``   -> logits
+  * ``forward_prefill(params, batch, cfg)`` -> (logits, cache)
+  * ``forward_decode(params, batch, cfg)``  -> (logits, new_cache)
+
+Families: dense (deepseek/qwen/phi4 + gemma2 local-global), moe (olmoe,
+grok-1), vlm (phi-3-vision: patch-embedding stub prefix), ssm (mamba2),
+hybrid (recurrentgemma RRL groups), encdec (seamless: audio-frame stub
+encoder + text decoder).  Layer stacks are scanned (jax.lax.scan over
+stacked params) with jax.checkpoint on the body for training memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from . import moe as moe_lib
+from . import rglru, ssm
+from .layers import (attn_out, attn_qkv, blockwise_attention, cache_insert,
+                     cost_unroll, decode_attention, rmsnorm, rope, swiglu)
+from .params import PD
+
+
+# ---------------------------------------------------------------------------
+# param trees
+# ---------------------------------------------------------------------------
+
+def _attn_pd(L, cfg: ArchConfig) -> Dict[str, Any]:
+    D, H, Kh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    t = {
+        "wq": {"w": PD((L, D, H, dh), ("layers", "embed", "heads", None))},
+        "wk": {"w": PD((L, D, Kh, dh), ("layers", "embed", "kv_heads", None))},
+        "wv": {"w": PD((L, D, Kh, dh), ("layers", "embed", "kv_heads", None))},
+        "wo": PD((L, H, dh, D), ("layers", "heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        t["wq"]["b"] = PD((L, H, dh), ("layers", "heads", None), "zeros")
+        t["wk"]["b"] = PD((L, Kh, dh), ("layers", "kv_heads", None), "zeros")
+        t["wv"]["b"] = PD((L, Kh, dh), ("layers", "kv_heads", None), "zeros")
+    return t
+
+
+def _mlp_pd(L, cfg: ArchConfig) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "wg": PD((L, D, F), ("layers", "embed", "mlp")),
+        "wi": PD((L, D, F), ("layers", "embed", "mlp")),
+        "wo_mlp": PD((L, F, D), ("layers", "mlp", "embed")),
+    }
+
+
+def _moe_pd(L, cfg: ArchConfig) -> Dict[str, Any]:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    return {
+        "router": PD((L, D, E), ("layers", "embed", None)),
+        "moe_wg": PD((L, E, D, F),
+                     ("layers", "experts", "embed", "expert_mlp")),
+        "moe_wi": PD((L, E, D, F),
+                     ("layers", "experts", "embed", "expert_mlp")),
+        "moe_wo": PD((L, E, F, D),
+                     ("layers", "experts", "expert_mlp", "embed")),
+    }
+
+
+def _norms_pd(L, cfg: ArchConfig, post: bool = False) -> Dict[str, Any]:
+    D = cfg.d_model
+    t = {
+        "ln1": PD((L, D), ("layers", None), "zeros"),
+        "ln2": PD((L, D), ("layers", None), "zeros"),
+    }
+    if post:  # gemma-style post norms
+        t["ln1p"] = PD((L, D), ("layers", None), "zeros")
+        t["ln2p"] = PD((L, D), ("layers", None), "zeros")
+    return t
+
+
+def _dense_stack_pd(L, cfg: ArchConfig, post_norms=False):
+    return {**_attn_pd(L, cfg), **_mlp_pd(L, cfg),
+            **_norms_pd(L, cfg, post_norms)}
+
+
+def _ssm_stack_pd(L, cfg: ArchConfig):
+    dims = ssm.dims_from_config(cfg)
+    D = cfg.d_model
+    return {
+        "ln1": PD((L, D), ("layers", None), "zeros"),
+        "in_proj": PD((L, D, dims.in_proj_dim), ("layers", "embed", "mlp")),
+        "conv": PD((L, dims.d_conv, dims.conv_dim), ("layers", None, None)),
+        "A_log": PD((L, dims.nheads), ("layers", None), "ssm_a"),
+        "D": PD((L, dims.nheads), ("layers", None), "ones"),
+        "dt_bias": PD((L, dims.nheads), ("layers", None), "dt_bias"),
+        "norm": PD((L, dims.d_inner), ("layers", None), "ones"),
+        "out_proj": PD((L, dims.d_inner, D), ("layers", "mlp", "embed")),
+    }
+
+
+def _rec_stack_pd(L, cfg: ArchConfig):
+    D, W = cfg.d_model, cfg.lru_width
+    return {
+        "ln1": PD((L, D), ("layers", None), "zeros"),
+        "ln1p": PD((L, D), ("layers", None), "zeros"),
+        "ln2": PD((L, D), ("layers", None), "zeros"),
+        "ln2p": PD((L, D), ("layers", None), "zeros"),
+        "in_x": PD((L, D, W), ("layers", "embed", "lru")),
+        "in_g": PD((L, D, W), ("layers", "embed", "lru")),
+        "conv": PD((L, 4, W), ("layers", None, "lru")),
+        "w_a": PD((L, W), ("layers", "lru"), "zeros"),
+        "b_a": PD((L, W), ("layers", "lru"), "zeros"),
+        "w_x": PD((L, W), ("layers", "lru"), "zeros"),
+        "b_x": PD((L, W), ("layers", "lru"), "zeros"),
+        "lam": PD((L, W), ("layers", "lru"), "ones"),
+        "out": PD((L, W, D), ("layers", "lru", "embed")),
+        **_mlp_pd(L, cfg),
+    }
+
+
+def param_tree(cfg: ArchConfig) -> Dict[str, Any]:
+    D, Vp = cfg.d_model, cfg.padded_vocab()
+    t: Dict[str, Any] = {
+        "embed": PD((Vp, D), ("vocab", "embed")),
+        "final_norm": PD((D,), (None,), "zeros"),
+    }
+    if not cfg.tied_embeddings:
+        t["unembed"] = PD((D, Vp), ("embed", "vocab"))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.layer_pattern == "local_global":
+            G = cfg.num_layers // 2
+            t["local"] = _dense_stack_pd(G, cfg, post_norms=True)
+            t["global"] = _dense_stack_pd(G, cfg, post_norms=True)
+        else:
+            t["layers"] = _dense_stack_pd(cfg.num_layers, cfg)
+    elif fam == "moe":
+        t["layers"] = {**_attn_pd(cfg.num_layers, cfg),
+                       **_moe_pd(cfg.num_layers, cfg),
+                       **_norms_pd(cfg.num_layers, cfg)}
+    elif fam == "ssm":
+        t["layers"] = _ssm_stack_pd(cfg.num_layers, cfg)
+    elif fam == "hybrid":
+        G, tail = _rrl_groups(cfg)
+        t["rec1"] = _rec_stack_pd(G, cfg)
+        t["rec2"] = _rec_stack_pd(G, cfg)
+        t["attn"] = {**_attn_pd(G, cfg), **_mlp_pd(G, cfg),
+                     **_norms_pd(G, cfg, post=True)}
+        if tail:
+            t["tail"] = _rec_stack_pd(tail, cfg)
+    elif fam == "encdec":
+        t["enc"] = _dense_stack_pd(cfg.enc_layers, cfg)
+        t["dec"] = {
+            **_dense_stack_pd(cfg.dec_layers, cfg),
+            "xq": {"w": PD((cfg.dec_layers, D, cfg.num_heads,
+                            cfg.resolved_head_dim),
+                           ("layers", "embed", "heads", None))},
+            "xk": {"w": PD((cfg.dec_layers, D, cfg.num_kv_heads,
+                            cfg.resolved_head_dim),
+                           ("layers", "embed", "kv_heads", None))},
+            "xv": {"w": PD((cfg.dec_layers, D, cfg.num_kv_heads,
+                            cfg.resolved_head_dim),
+                           ("layers", "embed", "kv_heads", None))},
+            "xo": PD((cfg.dec_layers, cfg.num_heads, cfg.resolved_head_dim,
+                      D), ("layers", "heads", None, "embed")),
+            "lnx": PD((cfg.dec_layers, D), ("layers", None), "zeros"),
+        }
+        t["enc_final_norm"] = PD((D,), (None,), "zeros")
+    else:
+        raise ValueError(fam)
+    return t
+
+
+def _rrl_groups(cfg: ArchConfig):
+    """(full RRL groups, tail recurrent layers) for the hybrid pattern."""
+    G = cfg.num_layers // 3
+    tail = cfg.num_layers - 3 * G
+    return G, tail
+
+
+# ---------------------------------------------------------------------------
+# cache trees (decode-mode carried state)
+# ---------------------------------------------------------------------------
+
+def _kv_pd(L, B, S, cfg: ArchConfig):
+    Kh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    axes = ("layers", "cache_batch", "cache_seq", "act_kv_heads", None)
+    return {"k": PD((L, B, S, Kh, dh), axes, "zeros"),
+            "v": PD((L, B, S, Kh, dh), axes, "zeros")}
+
+
+def _ssm_state_pd(L, B, cfg: ArchConfig):
+    dims = ssm.dims_from_config(cfg)
+    return {
+        "conv": PD((L, B, dims.d_conv - 1, dims.conv_dim),
+                   ("layers", "cache_batch", None, None), "zeros"),
+        "ssm": PD((L, B, dims.nheads, dims.d_state, dims.headdim),
+                  ("layers", "cache_batch", "act_heads", None, None),
+                  "zeros"),
+    }
+
+
+def _rec_state_pd(L, B, cfg: ArchConfig):
+    W = cfg.lru_width
+    return {
+        "conv": PD((L, B, 3, W), ("layers", "cache_batch", None, "act_lru"),
+                   "zeros"),
+        "h": PD((L, B, W), ("layers", "cache_batch", "act_lru"), "zeros"),
+    }
+
+
+def cache_tree(cfg: ArchConfig, B: int, S: int) -> Dict[str, Any]:
+    """Decode-mode cache for a max context of S tokens."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.layer_pattern == "local_global":
+            G = cfg.num_layers // 2
+            Wl = min(cfg.local_window, S)
+            return {"local": _kv_pd(G, B, Wl, cfg),
+                    "global": _kv_pd(G, B, S, cfg)}
+        return {"layers": _kv_pd(cfg.num_layers, B, S, cfg)}
+    if fam == "moe":
+        return {"layers": _kv_pd(cfg.num_layers, B, S, cfg)}
+    if fam == "ssm":
+        return {"layers": _ssm_state_pd(cfg.num_layers, B, cfg)}
+    if fam == "hybrid":
+        G, tail = _rrl_groups(cfg)
+        Wl = min(cfg.local_window, S)
+        t = {"rec1": _rec_state_pd(G, B, cfg),
+             "rec2": _rec_state_pd(G, B, cfg),
+             "attn": _kv_pd(G, B, Wl, cfg)}
+        if tail:
+            t["tail"] = _rec_state_pd(tail, B, cfg)
+        return t
+    if fam == "encdec":
+        Se = cfg.enc_context
+        return {"self": _kv_pd(cfg.dec_layers, B, S, cfg),
+                "cross": _kv_pd(cfg.dec_layers, B, Se, cfg)}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# layer applications
+# ---------------------------------------------------------------------------
+
+def _attn_apply(x, lp, cfg: ArchConfig, mode: str, cache, pos, *,
+                window: int = 0, post_norms: bool = False, causal=True,
+                wedge: bool = False):
+    """One attention sub-block.  Returns (x, new_cache)."""
+    B, S, _ = x.shape
+    xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q = attn_qkv(xn, lp["wq"])
+    k = attn_qkv(xn, lp["wk"])
+    v = attn_qkv(xn, lp["wv"])
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    k = shard(k, "act_batch", "act_seq", "act_kv_heads", None)
+    if mode == "decode":
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode":
+        kc = cache_insert(cache["k"], k, pos, window)
+        vc = cache_insert(cache["v"], v, pos, window)
+        o = decode_attention(q, kc, vc, pos, window=window,
+                             logit_cap=cfg.attn_logit_softcap)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        o = blockwise_attention(q, k, v, causal=causal, window=window,
+                                logit_cap=cfg.attn_logit_softcap,
+                                wedge=wedge)
+        if mode == "prefill":
+            if window > 0:
+                Wl = min(window, S)
+                new_cache = {"k": k[:, S - Wl:], "v": v[:, S - Wl:]}
+            else:
+                new_cache = {"k": k, "v": v}
+    out = attn_out(o, lp["wo"])
+    if post_norms:
+        out = rmsnorm(out, lp["ln1p"], cfg.norm_eps)
+    return x + out, new_cache
+
+
+def _mlp_apply(x, lp, cfg: ArchConfig, post_norms: bool = False):
+    xn = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xn, lp["wg"])) * jnp.einsum(
+            "bsd,df->bsf", xn, lp["wi"])
+        h = shard(h, "act_batch", "act_seq", "act_mlp")
+        out = jnp.einsum("bsf,fd->bsd", h, lp["wo_mlp"])
+    else:
+        out = swiglu(xn, lp["wg"], lp["wi"], lp["wo_mlp"])
+    if post_norms:
+        out = rmsnorm(out, lp["ln2p"], cfg.norm_eps)
+    return x + out
+
+
+def _moe_apply(x, lp, cfg: ArchConfig):
+    xn = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    mp = {"router": lp["router"], "wg": lp["moe_wg"], "wi": lp["moe_wi"],
+          "wo": lp["moe_wo"]}
+    return x + moe_lib.moe_ffn(xn, mp, cfg.num_experts, cfg.moe_top_k,
+                               cfg.capacity_factor)
+
+
+def _rec_apply(x, lp, cfg: ArchConfig, mode: str, state):
+    xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    out, new_state = rglru.recurrent_block(xn, lp, mode, state)
+    out = rmsnorm(out, lp["ln1p"], cfg.norm_eps)
+    x = x + out
+    x = _mlp_apply(x, lp, cfg, post_norms=True)
+    return x, new_state
+
+
+def _ssm_apply(x, lp, cfg: ArchConfig, mode: str, state):
+    xn = rmsnorm(x, lp["ln1"], cfg.norm_eps, zero_centered=False)
+    out, new_state = ssm.mamba2_block(xn, lp, cfg, mode, state)
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# stacks (scan over layers)
+# ---------------------------------------------------------------------------
+#
+# Three scan modes:
+#   train   -- xs = stacked params; no cache in or out; body rematerialized
+#   prefill -- xs = stacked params; ys = freshly-built per-layer cache
+#   decode  -- xs = (stacked params, cache); ys = updated per-layer cache
+
+def _scan_stack(body, x, stack, cache, mode: str, unroll=None):
+    if unroll is None:
+        unroll = cost_unroll()  # 1 normally; >1 only under cost-mode lowering
+    if mode == "train":
+        rb = jax.checkpoint(body, prevent_cse=False)
+
+        def wrapped(c, lp):
+            y, _ = rb(c, lp, None)
+            return y, None
+        x, _ = jax.lax.scan(wrapped, x, stack, unroll=unroll)
+        return x, None
+    if mode == "prefill":
+        def wrapped(c, lp):
+            return body(c, lp, None)
+        return jax.lax.scan(wrapped, x, stack, unroll=unroll)
+    # decode
+    def wrapped(c, inp):
+        lp, cl = inp
+        return body(c, lp, cl)
+    return jax.lax.scan(wrapped, x, (stack, cache), unroll=unroll)
+
+
+def _dense_body(cfg, mode, pos, window=0, post_norms=False, wedge=False):
+    def body(x, lp, cl):
+        x, nc = _attn_apply(x, lp, cfg, mode, cl, pos, window=window,
+                            post_norms=post_norms, wedge=wedge)
+        if "router" in lp:
+            x = _moe_apply(x, lp, cfg)
+        else:
+            x = _mlp_apply(x, lp, cfg, post_norms=post_norms)
+        return x, nc
+    return body
+
+
+def _apply_backbone(params, x, cfg: ArchConfig, mode: str, cache, pos,
+                    wedge: bool = False):
+    """Run the layer stack for any decoder family.  Returns (x, new_cache)."""
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.layer_pattern == "local_global":
+            bl = _dense_body(cfg, mode, pos, window=cfg.local_window,
+                             post_norms=True)
+            bg = _dense_body(cfg, mode, pos, post_norms=True, wedge=wedge)
+
+            def body(x, lp, cl):
+                x, ncl = bl(x, lp["local"],
+                            None if cl is None else cl["local"])
+                x, ncg = bg(x, lp["global"],
+                            None if cl is None else cl["global"])
+                return x, {"local": ncl, "global": ncg}
+
+            stack = {"local": params["local"], "global": params["global"]}
+            return _scan_stack(body, x, stack,
+                               None if cache is None else cache, mode)
+
+        body = _dense_body(cfg, mode, pos, wedge=wedge)
+        x, nc = _scan_stack(body, x, params["layers"],
+                            None if cache is None else cache["layers"], mode)
+        return x, (None if nc is None else {"layers": nc})
+
+    if fam == "ssm":
+        def body(x, lp, st):
+            return _ssm_apply(x, lp, cfg, mode, st)
+        x, nst = _scan_stack(body, x, params["layers"],
+                             None if cache is None else cache["layers"],
+                             mode)
+        return x, (None if nst is None else {"layers": nst})
+
+    if fam == "hybrid":
+        ba = _dense_body(cfg, mode, pos, window=cfg.local_window,
+                         post_norms=True)
+
+        def body(x, lp, cl):
+            x, ns1 = _rec_apply(x, lp["rec1"], cfg, mode,
+                                None if cl is None else cl["rec1"])
+            x, ns2 = _rec_apply(x, lp["rec2"], cfg, mode,
+                                None if cl is None else cl["rec2"])
+            x, nat = ba(x, lp["attn"], None if cl is None else cl["attn"])
+            return x, {"rec1": ns1, "rec2": ns2, "attn": nat}
+
+        stack = {k: params[k] for k in ("rec1", "rec2", "attn")}
+        cc = None if cache is None else {k: cache[k]
+                                         for k in ("rec1", "rec2", "attn")}
+        x, ncache = _scan_stack(body, x, stack, cc, mode)
+
+        if "tail" in params:
+            def tbody(x, lp, st):
+                return _rec_apply(x, lp, cfg, mode, st)
+            tc = None if cache is None else cache["tail"]
+            x, ntail = _scan_stack(tbody, x, params["tail"], tc, mode,
+                                   unroll=True)
+            if ncache is not None:
+                ncache = dict(ncache)
+                ncache["tail"] = ntail
+        return x, ncache
+
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# top-level forwards
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ArchConfig):
+    x = params["embed"][tokens]  # gather over vocab-sharded table
+    if cfg.scale_embedding:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "act_batch", "act_seq", "act_embed")
+
+
+def _logits(params, x, cfg: ArchConfig):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tied_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    if cfg.final_logit_softcap:
+        from .layers import softcap as _sc
+        out = _sc(out, cfg.final_logit_softcap)
+    return shard(out, "act_batch", "act_seq", "act_vocab")
+
+
+def _prefix_patches(x_text, patch_embeds, cfg: ArchConfig):
+    """VLM: prepend the (stubbed) patch embeddings to the token stream."""
+    pe = patch_embeds.astype(x_text.dtype)
+    return jnp.concatenate([pe, x_text], axis=1)
+
+
+def forward_train(params, batch, cfg: ArchConfig, wedge: bool = False):
+    """Teacher-forced logits for the LM families.  batch['tokens'] (B, S)."""
+    if cfg.family == "encdec":
+        return _encdec_forward(params, batch, cfg, mode="train")[0]
+    x = _embed(params, batch["tokens"], cfg)
+    if cfg.family == "vlm":
+        x = _prefix_patches(x, batch["patch_embeds"], cfg)
+    x, _ = _apply_backbone(params, x, cfg, "train", None, None, wedge=wedge)
+    return _logits(params, x, cfg)
+
+
+def forward_prefill(params, batch, cfg: ArchConfig, wedge: bool = False):
+    """Prefill: logits over the prompt + freshly built decode cache."""
+    if cfg.family == "encdec":
+        return _encdec_forward(params, batch, cfg, mode="prefill")
+    x = _embed(params, batch["tokens"], cfg)
+    if cfg.family == "vlm":
+        x = _prefix_patches(x, batch["patch_embeds"], cfg)
+    x, cache = _apply_backbone(params, x, cfg, "prefill", None, None,
+                               wedge=wedge)
+    return _logits(params, x, cfg), cache
+
+
+def forward_decode(params, batch, cfg: ArchConfig):
+    """One decode step.  batch: token (B,1), pos scalar, cache tree."""
+    if cfg.family == "encdec":
+        return _encdec_forward(params, batch, cfg, mode="decode")
+    x = _embed(params, batch["token"], cfg)
+    x, new_cache = _apply_backbone(params, x, cfg, "decode", batch["cache"],
+                                   batch["pos"])
+    return _logits(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (seamless-m4t backbone; audio frontend stubbed)
+# ---------------------------------------------------------------------------
+
+def _cross_apply(x, lp, cfg: ArchConfig, mode: str, cross_cache):
+    """Decoder cross-attention over (cached) encoder keys/values."""
+    xn = rmsnorm(x, lp["lnx"], cfg.norm_eps)
+    q = attn_qkv(xn, lp["xq"])
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    o = blockwise_attention(q, cross_cache["k"], cross_cache["v"],
+                            causal=False)
+    return x + attn_out(o, lp["xo"])
+
+
+def _enc_body(cfg):
+    def body(x, lp, _):
+        x, _ = _attn_apply(x, lp, cfg, "train", None, None, causal=False)
+        x = _mlp_apply(x, lp, cfg)
+        return x, None
+    return body
+
+
+def _encdec_forward(params, batch, cfg: ArchConfig, mode: str):
+    # --- encoder over stub frame embeddings (train/prefill only) ---
+    if mode in ("train", "prefill"):
+        e = shard(batch["frames"].astype(jnp.bfloat16),
+                  "act_batch", "act_seq", "act_embed")
+        e, _ = _scan_stack(_enc_body(cfg), e, params["enc"], None,
+                           "train" if mode == "train" else "prefill")
+        # (prefill of the encoder emits no cache; cross K/V built below)
+        if mode == "prefill" and isinstance(e, tuple):
+            e = e[0]
+        enc_out = rmsnorm(e, params["enc_final_norm"], cfg.norm_eps)
+
+    # --- decoder ---
+    if mode == "decode":
+        x = _embed(params, batch["token"], cfg)
+        cache = batch["cache"]
+
+        def body(x, lp, cl):
+            x, nself = _attn_apply(x, lp, cfg, mode, cl["self"],
+                                   batch["pos"])
+            x = _cross_apply(x, lp, cfg, mode, cl["cross"])
+            x = _mlp_apply(x, lp, cfg)
+            return x, {"self": nself, "cross": cl["cross"]}
+
+        def wrapped(c, inp):
+            lp, cl = inp
+            return body(c, lp, cl)
+        x, ncache = jax.lax.scan(
+            wrapped, x,
+            (params["dec"], {"self": cache["self"], "cross": cache["cross"]}),
+            unroll=cost_unroll())
+        return _logits(params, x, cfg), {"self": ncache["self"],
+                                         "cross": ncache["cross"]}
+
+    # train / prefill: build cross K/V from encoder output per layer
+    x = _embed(params, batch["tokens"], cfg)
+
+    def body(x, lp, _):
+        x, nself = _attn_apply(x, lp, cfg, mode, None, None)
+        xk = attn_qkv(enc_out, lp["xk"])
+        xv = attn_qkv(enc_out, lp["xv"])
+        x = _cross_apply(x, lp, cfg, mode, {"k": xk, "v": xv})
+        x = _mlp_apply(x, lp, cfg)
+        return x, (None if mode == "train"
+                   else {"self": nself, "cross": {"k": xk, "v": xv}})
+
+    if mode == "train":
+        rb = jax.checkpoint(body, prevent_cse=False)
+
+        def wrapped(c, lp):
+            y, _ = rb(c, lp, None)
+            return y, None
+        x, _ = jax.lax.scan(wrapped, x, params["dec"],
+                            unroll=cost_unroll())
+        return (_logits(params, x, cfg),)
+
+    def wrapped(c, lp):
+        return body(c, lp, None)
+    x, cache = jax.lax.scan(wrapped, x, params["dec"],
+                            unroll=cost_unroll())
+    return _logits(params, x, cfg), cache

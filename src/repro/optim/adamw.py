@@ -1,0 +1,80 @@
+"""AdamW (decoupled weight decay) -- pure-JAX, pytree-native.
+
+Optimizer state mirrors the parameter tree, so the same PartitionSpecs shard
+it (ZeRO-style when the params are FSDP-sharded over the data axes).
+First/second moments are kept in float32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: Any            # first moments (f32 tree)
+    nu: Any            # second moments (f32 tree)
+
+
+def init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, params),
+        nu=jax.tree_util.tree_map(f32, params),
+    )
+
+
+def abstract_state(abstract_params) -> AdamWState:
+    """ShapeDtypeStruct mirror for dry-run lowering."""
+    def f32(p):
+        sh = getattr(p, "sharding", None)
+        if sh is not None:
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=sh)
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, abstract_params),
+        nu=jax.tree_util.tree_map(f32, abstract_params),
+    )
+
+
+def update(
+    params,
+    grads,
+    state: AdamWState,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    """One AdamW step.  Returns (new_params, new_state)."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * g32
+        v_new = b2 * v + (1.0 - b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    outs = [upd(p, g, m, v)
+            for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,228 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step PER CHIP
+(cost_analysis reports the per-device SPMD module, so no further division by
+chip count):
+
+    compute    = HLO_FLOPs / peak_FLOPs_chip
+    memory     = HLO_bytes / HBM_bw_chip
+    collective = collective_bytes / ICI_bw_chip
+
+collective_bytes is parsed from the post-SPMD HLO text: the output-tensor
+bytes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (a consistent per-device "bytes placed on ICI" proxy --
+ring all-reduce moves ~2x the shard bytes, all-gather (n-1)/n of the output;
+we report the unweighted output bytes and note the convention here).
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12   # bf16 per chip
+HBM_BW = 819e9        # bytes/s per chip
+ICI_BW = 50e9         # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "opaque": 0,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+# e.g.:  %ar = f32[8,128]{1,0} all-reduce(...)
+#        %t  = (f32[8]{0}, f32[8]{0}) all-gather(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None or b == 0:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective op kind over the HLO module."""
+    out = {op: 0 for op in _COLL_OPS}
+    counts = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        for op in _COLL_OPS:
+            # match " op(" and " op-start(" (async pairs) but not "-done"
+            if f" {op}(" in line or f" {op}-start(" in line:
+                eq = line.find("=")
+                paren = line.find(f" {op}")
+                if eq < 0 or paren <= eq:
+                    continue
+                type_str = line[eq + 1: paren]
+                out[op] += _shape_bytes(type_str)
+                counts[op] += 1
+                break
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float               # per-device HLO flops
+    hbm_bytes: float           # per-device HLO bytes accessed
+    coll_bytes: float          # per-device collective output bytes
+    coll_breakdown: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float         # analytic useful flops per device
+    useful_ratio: float        # model_flops / flops
+    memory_stats: Dict[str, float]
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def model_flops_per_device(active_params: int, shape, chips: int) -> float:
+    """Analytic MODEL_FLOPS: 6ND train, 2ND inference (paper-standard)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active_params * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active_params * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * active_params * shape.global_batch / chips
+
+
+def analyze(compiled, arch: str, shape, mesh_name: str, chips: int,
+            active_params: int, note: str = "") -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    counts = colls.pop("_counts", {})
+    cbytes = float(sum(colls.values()))
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = cbytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bott = max(terms, key=terms.get)
+    mf = model_flops_per_device(active_params, shape, chips)
+    mem = compiled.memory_analysis()
+    mem_stats = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_stats[attr] = float(v)
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops=flops, hbm_bytes=hbm, coll_bytes=cbytes,
+        coll_breakdown={k: float(v) for k, v in colls.items()},
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bottleneck=bott,
+        model_flops=mf, useful_ratio=(mf / flops if flops else 0.0),
+        memory_stats=mem_stats, note=note,
+    )
+
+
+def summarize(r: Roofline) -> str:
+    return (f"{r.arch:24s} {r.shape:12s} {r.mesh:6s} "
+            f"comp={r.t_compute*1e3:9.3f}ms mem={r.t_memory*1e3:9.3f}ms "
+            f"coll={r.t_collective*1e3:9.3f}ms -> {r.bottleneck:10s} "
+            f"useful={r.useful_ratio:6.3f}")
+
+
+# ---------------------------------------------------------------------------
+# loop-body cost correction (XLA counts while bodies ONCE, not x trip count)
+# ---------------------------------------------------------------------------
+#
+# The dry-run lowers each cell twice more in "cost mode" (dense attention so
+# no loops hide inside the layer body): once with the layer scan at unroll=1
+# (m1 = F + B) and once at unroll=u (mu = F + u*B), u a divisor of the trip
+# count T.  Then  B = (mu - m1) / (u - 1)  and  true = m1 + (T - 1) * B.
+
+def scan_trip_count(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // 3
+    if cfg.layer_pattern == "local_global":
+        return cfg.num_layers // 2
+    if cfg.family == "encdec":
+        return cfg.enc_layers
+    return cfg.num_layers
+
+
+def unroll_factor(T: int) -> int:
+    """Smallest divisor > 1 of the trip count (full unroll if prime)."""
+    for u in range(2, int(T ** 0.5) + 1):
+        if T % u == 0:
+            return u
+    return T
+
+
+def extract_metrics(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    colls = parse_collectives(compiled.as_text())
+    colls.pop("_counts", None)
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes": float(ca.get("bytes accessed", 0.0))}
+    for k, v in colls.items():
+        out[f"coll:{k}"] = float(v)
+    return out
+
+
+def combine_loop_costs(m1: Dict[str, float], mu: Dict[str, float],
+                       u: int, T: int) -> Dict[str, float]:
+    out = {}
+    for k in m1:
+        body = max((mu.get(k, 0.0) - m1[k]) / (u - 1), 0.0)
+        out[k] = m1[k] + (T - 1) * body
+    return out
+
+
+def analyze_corrected(deploy_compiled, metrics: Dict[str, float], arch: str,
+                      shape, mesh_name: str, chips: int, active_params: int,
+                      note: str = "") -> Roofline:
+    """Roofline from loop-corrected metrics + the deploy artifact's memory."""
+    flops = metrics["flops"]
+    hbm = metrics["bytes"]
+    coll = {k.split(":", 1)[1]: v for k, v in metrics.items()
+            if k.startswith("coll:")}
+    cbytes = float(sum(coll.values()))
+    t_c, t_m, t_x = flops / PEAK_FLOPS, hbm / HBM_BW, cbytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bott = max(terms, key=terms.get)
+    mf = model_flops_per_device(active_params, shape, chips)
+    mem = deploy_compiled.memory_analysis()
+    mem_stats = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_stats[attr] = float(v)
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops=flops, hbm_bytes=hbm, coll_bytes=cbytes,
+        coll_breakdown=coll, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bott, model_flops=mf,
+        useful_ratio=(mf / flops if flops else 0.0),
+        memory_stats=mem_stats, note=note)

@@ -1,0 +1,82 @@
+"""Training loop driver: jit'd steps, checkpoint/restart, straggler watchdog.
+
+Used by examples/ and the integration tests; the same loop drives a real
+cluster (swap the mesh for the production one and point ``ckpt_dir`` at
+durable storage).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import ZipfStream
+from repro.models import model as M
+from repro.optim import adamw, gradcomp
+from repro.train import checkpoint, steps
+from repro.train.elastic import StragglerWatchdog
+
+
+def run_training(
+    cfg: ArchConfig,
+    num_steps: int,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    compressed: bool = False,
+    cc: Optional[gradcomp.CompressorConfig] = None,
+    mesh=None,
+    log_every: int = 10,
+    seed: int = 0,
+    print_fn: Callable[[str], None] = print,
+) -> Dict[str, Any]:
+    """Train ``cfg`` on the synthetic Zipf stream.  Returns final metrics."""
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    opt = adamw.init(params)
+    stream = ZipfStream(vocab_size=cfg.vocab_size, alpha=1.2, seed=seed)
+    start_step = 0
+
+    if compressed:
+        assert mesh is not None, "compressed DP needs a mesh"
+        cc = cc or gradcomp.CompressorConfig()
+        state = steps.CompressedTrainState(
+            params=params, opt=opt, error=gradcomp.init_error(params))
+        dp_axes = tuple(ax for ax in ("pod", "data") if ax in mesh.shape)
+        step_fn = jax.jit(steps.make_compressed_train_step(
+            cfg, mesh, cc, dp_axes=dp_axes, lr=lr))
+    else:
+        state = steps.TrainState(params=params, opt=opt)
+        step_fn = jax.jit(
+            lambda s, b: steps.train_step(s, b, cfg, lr=lr))
+
+    if ckpt_dir:
+        checkpoint.gc_tmp(ckpt_dir)
+        restored, rstep = checkpoint.restore_latest(ckpt_dir, state)
+        if restored is not None:
+            state, start_step = restored, rstep + 1
+            print_fn(f"[ckpt] resumed from step {rstep}")
+
+    watchdog = StragglerWatchdog(threshold=3.0)
+    losses = []
+    for step in range(start_step, num_steps):
+        b = stream.lm_batch(step, shard=0, batch=batch, seq=seq)
+        watchdog.step_begin()
+        state, metrics = step_fn(state, b)
+        loss = float(metrics["loss"])
+        watchdog.step_end(step)
+        losses.append(loss)
+        if step % log_every == 0:
+            print_fn(f"step {step:5d}  loss {loss:.4f}")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            checkpoint.save(ckpt_dir, step, state)
+    if ckpt_dir:
+        checkpoint.save(ckpt_dir, num_steps - 1, state)
+    return {"final_loss": losses[-1] if losses else float("nan"),
+            "losses": losses, "stragglers": watchdog.flagged,
+            "state": state}

@@ -1,0 +1,21 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see the
+single real CPU device; only launch/dryrun.py requests 512 host devices.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def zipf_freqs(n: int, alpha: float, seed: int = 0) -> np.ndarray:
+    """Deterministic Zipf-like frequency vector: freq(rank r) ~ r^-alpha."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    f = ranks ** (-alpha) * n
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    return f[perm].astype(np.float32)

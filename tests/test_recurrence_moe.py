@@ -1,0 +1,192 @@
+"""Deep equivalence properties for the recurrent/MoE compute cores.
+
+These pin the invariants the serving path relies on:
+  * SSD chunked scan == step-by-step recurrence (any chunk size)
+  * RG-LRU associative scan == sequential gate recurrence
+  * MoE dispatch reproduces the dense mixture when capacity is unbounded
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe as moe_lib
+from repro.models import rglru, ssm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestSSD:
+    def _inputs(self, B=2, S=64, H=4, P=8, N=16, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)) - 1)
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+        B_ = jax.random.normal(ks[3], (B, S, 1, N)) * 0.3
+        C_ = jax.random.normal(ks[4], (B, S, 1, N)) * 0.3
+        D_ = jnp.ones((H,))
+        dims = ssm.SSMDims(d_inner=H * P, nheads=H, headdim=P, d_state=N,
+                           ngroups=1, d_conv=4)
+        return x, dt, A, B_, C_, D_, dims
+
+    def test_chunked_equals_stepwise(self):
+        x, dt, A, B_, C_, D_, dims = self._inputs()
+        y_chunk, final = ssm.ssd_chunked(x, dt, A, B_, C_, D_, dims,
+                                         chunk=16)
+        # sequential reference
+        Bsz, S, H, P = x.shape
+        N = B_.shape[-1]
+        h = jnp.zeros((Bsz, H, N, P))
+        ys = []
+        for t in range(S):
+            y_t, h = ssm.ssd_decode_step(
+                x[:, t: t + 1], dt[:, t: t + 1], A, B_[:, t: t + 1],
+                C_[:, t: t + 1], D_, h)
+            ys.append(y_t)
+        y_seq = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                                   np.asarray(y_seq, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(final), np.asarray(h),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+    def test_chunk_size_invariance(self, chunk):
+        x, dt, A, B_, C_, D_, dims = self._inputs(seed=1)
+        y_ref, f_ref = ssm.ssd_chunked(x, dt, A, B_, C_, D_, dims, chunk=64)
+        y, f = ssm.ssd_chunked(x, dt, A, B_, C_, D_, dims, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_initial_state_continuation(self):
+        """Splitting a sequence and carrying the state == one full pass."""
+        x, dt, A, B_, C_, D_, dims = self._inputs(seed=2)
+        y_full, f_full = ssm.ssd_chunked(x, dt, A, B_, C_, D_, dims,
+                                         chunk=16)
+        cut = 32
+        y1, f1 = ssm.ssd_chunked(x[:, :cut], dt[:, :cut], A, B_[:, :cut],
+                                 C_[:, :cut], D_, dims, chunk=16)
+        y2, f2 = ssm.ssd_chunked(x[:, cut:], dt[:, cut:], A, B_[:, cut:],
+                                 C_[:, cut:], D_, dims, chunk=16,
+                                 initial_state=f1)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], 1), np.float32),
+            np.asarray(y_full, np.float32), rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(f2), np.asarray(f_full),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestRGLRU:
+    def _params(self, W=32, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        return {
+            "w_a": jax.random.normal(ks[0], (W,)) * 0.5,
+            "b_a": jnp.zeros((W,)),
+            "w_x": jax.random.normal(ks[1], (W,)) * 0.5,
+            "b_x": jnp.zeros((W,)),
+            "lam": jnp.ones((W,)) * 0.5,
+        }
+
+    def test_scan_equals_stepwise(self):
+        W = 32
+        lp = self._params(W)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, W))
+        y_scan, h_scan = rglru.rglru_scan(x, lp)
+        h = jnp.zeros((2, W))
+        ys = []
+        for t in range(40):
+            y_t, h = rglru.rglru_step(x[:, t: t + 1], lp, h)
+            ys.append(y_t)
+        y_seq = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_scan, np.float32),
+                                   np.asarray(y_seq, np.float32),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_carried_state_continuation(self):
+        W = 16
+        lp = self._params(W, seed=3)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 24, W))
+        y_full, h_full = rglru.rglru_scan(x, lp)
+        y1, h1 = rglru.rglru_scan(x[:, :10], lp)
+        y2, h2 = rglru.rglru_scan(x[:, 10:], lp, h0=h1)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate([y1, y2], 1), np.float32),
+            np.asarray(y_full, np.float32), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                                   rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_prop_stability(self, seed):
+        """|a_t| < 1 => bounded state for bounded inputs."""
+        W = 8
+        lp = self._params(W, seed=seed % 7)
+        x = jax.random.normal(jax.random.PRNGKey(seed), (1, 200, W))
+        y, h = rglru.rglru_scan(x, lp)
+        assert bool(jnp.isfinite(y).all())
+        assert float(jnp.abs(h).max()) < 100.0
+
+
+class TestMoE:
+    def test_dense_mixture_equivalence(self):
+        """With capacity >= tokens, dispatch == explicit top-k mixture."""
+        B, S, D, E, K, F = 2, 16, 8, 4, 2, 12
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(ks[0], (B, S, D)) * 0.5
+        mp = {
+            "router": jax.random.normal(ks[1], (D, E)) * 0.5,
+            "wg": jax.random.normal(ks[2], (E, D, F)) * 0.3,
+            "wi": jax.random.normal(ks[3], (E, D, F)) * 0.3,
+            "wo": jax.random.normal(ks[4], (E, F, D)) * 0.3,
+        }
+        y = moe_lib.moe_ffn(x, mp, E, K, capacity_factor=8.0)
+
+        # explicit reference: every token through its top-k experts
+        logits = jnp.einsum("bsd,de->bse", x, mp["router"])
+        probs = jax.nn.softmax(logits, -1)
+        gv, gi = jax.lax.top_k(probs, K)
+        gv = gv / gv.sum(-1, keepdims=True)
+
+        def expert(e, v):  # v (D,)
+            h = jax.nn.silu(v @ mp["wg"][e]) * (v @ mp["wi"][e])
+            return h @ mp["wo"][e]
+
+        ref = np.zeros((B, S, D), np.float32)
+        for b in range(B):
+            for s in range(S):
+                for j in range(K):
+                    ref[b, s] += float(gv[b, s, j]) * np.asarray(
+                        expert(int(gi[b, s, j]), x[b, s]), np.float32)
+        np.testing.assert_allclose(np.asarray(y, np.float32), ref,
+                                   rtol=3e-3, atol=3e-3)
+
+    def test_capacity_drops_overflow(self):
+        """capacity_factor -> 0 forces drops; output stays finite and
+        dropped tokens contribute zero."""
+        B, S, D, E, K, F = 1, 32, 8, 2, 1, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        x = jax.random.normal(ks[0], (B, S, D))
+        mp = {
+            "router": jnp.zeros((D, E)).at[0, 0].set(10.0),  # all -> expert 0
+            "wg": jax.random.normal(ks[2], (E, D, F)),
+            "wi": jax.random.normal(ks[3], (E, D, F)),
+            "wo": jax.random.normal(ks[4], (E, F, D)),
+        }
+        y = moe_lib.moe_ffn(x, mp, E, K, capacity_factor=0.25)
+        assert bool(jnp.isfinite(y).all())
+        # more than half the tokens overflowed the capacity -> exact zeros
+        zero_rows = np.mean(np.all(np.asarray(y) == 0.0, axis=-1))
+        assert zero_rows > 0.3
+
+    def test_load_balance_loss(self):
+        D, E = 8, 4
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, D))
+        router = jax.random.normal(jax.random.PRNGKey(3), (D, E))
+        l = float(moe_lib.aux_load_balance_loss(x, router, E, 2))
+        assert l >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz; = 1 when balanced

@@ -1,0 +1,158 @@
+"""WORp sampler tests -- the paper's core claims, executable.
+
+Key test: the TWO-PASS sampler returns EXACTLY the perfect p-ppswor sample
+(same transform seed) with the paper's success probability ~ 1 (Theorem 4.1);
+the ONE-PASS sampler approximates it (Theorem 5.1).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import estimators, perfect, transforms, worp
+from tests.conftest import zipf_freqs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_two_pass(freqs, k, p, seed_t, rows=7, width=None, batches=4):
+    n = len(freqs)
+    width = width or 31 * k
+    keys = jnp.arange(n)
+    fv = jnp.asarray(freqs)
+    st1 = worp.onepass_init(rows, width, candidates=4 * k, seed_sketch=3,
+                            seed_transform=seed_t)
+    step = (n + batches - 1) // batches
+    for lo in range(0, n, step):
+        st1 = worp.onepass_update(st1, keys[lo:lo + step], fv[lo:lo + step],
+                                  p)
+    st2 = worp.twopass_init(capacity=2 * (k + 1), seed_transform=seed_t)
+    for lo in range(0, n, step):
+        st2 = worp.twopass_update(st2, st1.sketch, keys[lo:lo + step],
+                                  fv[lo:lo + step])
+    return st1, st2
+
+
+class TestTwoPassExactness:
+    @pytest.mark.parametrize("p,alpha", [(1.0, 1.0), (1.0, 2.0),
+                                         (2.0, 1.0), (2.0, 2.0), (0.5, 1.5)])
+    def test_matches_perfect_ppswor(self, p, alpha):
+        n, k = 3000, 20
+        freqs = zipf_freqs(n, alpha, seed=7)
+        seed_t = 1234
+        oracle = perfect.ppswor_sample(jnp.asarray(freqs), k, p, seed_t)
+        _, st2 = run_two_pass(freqs, k, p, seed_t)
+        sample = worp.twopass_sample(st2, k, p)
+        assert set(np.asarray(sample.keys).tolist()) == set(
+            np.asarray(oracle.keys).tolist())
+        assert float(sample.threshold) == pytest.approx(
+            float(oracle.threshold), rel=1e-5)
+        # exact frequencies recovered
+        of = dict(zip(np.asarray(oracle.keys).tolist(),
+                      np.asarray(oracle.freqs).tolist()))
+        for key, f in zip(np.asarray(sample.keys), np.asarray(sample.freqs)):
+            assert f == pytest.approx(of[int(key)], rel=1e-5)
+
+    def test_signed_data(self):
+        """Negative updates: WORp samples by |nu|^p (CountSketch path)."""
+        n, k, p = 1000, 10, 2.0
+        rng = np.random.default_rng(0)
+        freqs = rng.normal(size=n).astype(np.float32)
+        freqs[:5] *= 100  # heavy signed keys
+        seed_t = 99
+        oracle = perfect.ppswor_sample(jnp.asarray(freqs), k, p, seed_t)
+        _, st2 = run_two_pass(freqs, k, p, seed_t)
+        sample = worp.twopass_sample(st2, k, p)
+        assert set(np.asarray(sample.keys).tolist()) == set(
+            np.asarray(oracle.keys).tolist())
+
+    def test_merge_composability(self):
+        """twopass_merge(shard sketches) == single-stream pass II."""
+        n, k, p = 2000, 16, 1.0
+        freqs = zipf_freqs(n, 2.0, seed=8)
+        st1, st2_stream = run_two_pass(freqs, k, p, 77)
+        # shard pass II across two workers, then merge
+        keys = jnp.arange(n)
+        fv = jnp.asarray(freqs)
+        a = worp.twopass_init(2 * (k + 1), 77)
+        b = worp.twopass_init(2 * (k + 1), 77)
+        a = worp.twopass_update(a, st1.sketch, keys[:n // 2], fv[:n // 2])
+        b = worp.twopass_update(b, st1.sketch, keys[n // 2:], fv[n // 2:])
+        merged = worp.twopass_merge(a, b)
+        s1 = worp.twopass_sample(st2_stream, k, p)
+        s2 = worp.twopass_sample(merged, k, p)
+        assert set(np.asarray(s1.keys).tolist()) == set(
+            np.asarray(s2.keys).tolist())
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_prop_two_pass_exact_over_seeds(self, seed_t):
+        n, k, p = 1500, 12, 1.0
+        freqs = zipf_freqs(n, 2.0, seed=9)
+        oracle = perfect.ppswor_sample(jnp.asarray(freqs), k, p, seed_t)
+        _, st2 = run_two_pass(freqs, k, p, seed_t)
+        sample = worp.twopass_sample(st2, k, p)
+        # Theorem 4.1: success probability >= 1 - delta; with k x 31 sketch
+        # failures should be essentially absent at this scale
+        assert set(np.asarray(sample.keys).tolist()) == set(
+            np.asarray(oracle.keys).tolist())
+
+
+class TestOnePass:
+    def test_high_overlap_and_freq_error(self):
+        n, k, p = 3000, 50, 1.0
+        freqs = zipf_freqs(n, 2.0, seed=10)
+        seed_t = 5
+        oracle = perfect.ppswor_sample(jnp.asarray(freqs), k, p, seed_t)
+        st1, _ = run_two_pass(freqs, k, p, seed_t)
+        sample = worp.onepass_sample(st1, k, p)
+        overlap = len(set(np.asarray(sample.keys).tolist())
+                      & set(np.asarray(oracle.keys).tolist()))
+        assert overlap >= int(0.9 * k)
+        # approximate frequencies have small relative error (Eq. 6 + rHH)
+        of = dict(zip(np.asarray(oracle.keys).tolist(),
+                      np.asarray(oracle.freqs).tolist()))
+        rel = [abs(f - of[int(c)]) / abs(of[int(c)])
+               for c, f in zip(np.asarray(sample.keys),
+                               np.asarray(sample.freqs)) if int(c) in of]
+        assert np.median(rel) < 0.15
+
+    def test_extended_sample_certification(self):
+        n, k, p = 2000, 20, 1.0
+        freqs = zipf_freqs(n, 2.0, seed=11)
+        _, st2 = run_two_pass(freqs, k, p, 13)
+        certified, tau = worp.twopass_extended_sample(st2, k, p)
+        # the certified set is at least k keys and tau is <= the k-th value
+        assert int(certified.sum()) >= k
+        assert np.isfinite(float(tau))
+
+
+class TestTransforms:
+    def test_invert_roundtrip(self):
+        keys = jnp.arange(100)
+        vals = jnp.linspace(1, 10, 100)
+        for p in (0.5, 1.0, 2.0):
+            t = transforms.transform_values(keys, vals, p, 3)
+            back = transforms.invert_frequency(keys, t, p, 3)
+            np.testing.assert_allclose(np.asarray(back), np.asarray(vals),
+                                       rtol=1e-4)
+
+    def test_monotone_order_equivalence(self):
+        """order(w*) under p equals order of w^p / r (Sec. 2.2)."""
+        keys = jnp.arange(500)
+        vals = jnp.asarray(zipf_freqs(500, 1.2, seed=12))
+        p = 2.0
+        t = np.asarray(transforms.transform_values(keys, vals, p, 3))
+        r = np.asarray(transforms.randomizer(keys, 3))
+        direct = np.asarray(vals) ** p / r
+        assert np.array_equal(np.argsort(-np.abs(t)),
+                              np.argsort(-direct))
+
+    def test_priority_scheme(self):
+        keys = jnp.arange(1000)
+        vals = jnp.ones(1000)
+        t = np.asarray(transforms.transform_values(
+            keys, vals, 1.0, 3, scheme=transforms.PRIORITY))
+        # 1/U is heavy tailed: max should far exceed median
+        assert np.max(t) > 50 * np.median(t)
