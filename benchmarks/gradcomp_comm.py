@@ -20,8 +20,8 @@ from repro.optim import gradcomp
 def run(verbose: bool = True):
     from jax.experimental.shard_map import shard_map
     rows = []
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((1,), ("data",))
     n = 1 << 18  # 262k-coordinate gradient
     rng = np.random.default_rng(0)
     for mode in ("onepass", "twopass"):

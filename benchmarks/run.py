@@ -14,8 +14,9 @@ def main() -> None:
                     help="fewer Monte Carlo runs")
     args = ap.parse_args()
 
-    from . import (fig1_wor_vs_wr, fig2_rankfreq, gradcomp_comm,
-                   psi_calibration, sketch_throughput, table3_nrmse)
+    from . import (engine_throughput, fig1_wor_vs_wr, fig2_rankfreq,
+                   gradcomp_comm, psi_calibration, sketch_throughput,
+                   table3_nrmse)
     from .common import emit
 
     rows = []
@@ -30,6 +31,9 @@ def main() -> None:
     r = psi_calibration.run(verbose=False); rows += r; emit(r)
     print("== Sketch data-plane throughput ==")
     r = sketch_throughput.run(verbose=False); rows += r; emit(r)
+    print("== SketchEngine batched multi-stream throughput ==")
+    r = engine_throughput.run(verbose=False, fast=args.fast)
+    rows += r; emit(r)
     print("== WORp gradient compression (Sec. 1 application) ==")
     r = gradcomp_comm.run(verbose=False); rows += r; emit(r)
     print(f"== {len(rows)} benchmark rows done ==")

@@ -24,8 +24,8 @@ def main():
     ap.add_argument("--ckpt", default="/tmp/worp_ckpt")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((4,), ("data",))
     cfg = get_config("gemma2_2b").reduced()
     cc = gradcomp.CompressorConfig(k=512, rows=7, width=4096,
                                    candidates=1024, p=1.0, mode="twopass")

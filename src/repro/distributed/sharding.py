@@ -124,7 +124,9 @@ def resolve_pspec(
             size = nxt
         for ax in kept:
             used.add(ax)
-        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+        # always a tuple (or None): P('x') and P(('x',)) shard identically
+        # but no longer compare equal in current jax PartitionSpec
+        out.append(tuple(kept) if kept else None)
     return P(*out)
 
 
@@ -141,3 +143,69 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
 def named_sharding(shape, axes, mesh=None, rules=None) -> NamedSharding:
     mesh = mesh or _CTX.mesh
     return NamedSharding(mesh, resolve_pspec(shape, axes, mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# sketch merge trees (SketchEngine distributed reduction layer)
+# ---------------------------------------------------------------------------
+# WORp states are composable: merge(a, b) is the state of the union of the
+# two shards' data.  These helpers give the reduction O(log D) depth:
+#
+#   tree_merge          -- host-side pairwise tree over a list of states
+#   butterfly_allmerge  -- in-shard_map hypercube exchange: round r swaps
+#                          states with the XOR-partner at distance 2^r via
+#                          ppermute and merges, so after log2(D) rounds every
+#                          device holds the global state (an allreduce with an
+#                          ARBITRARY merge fn -- candidate buffers included,
+#                          which a plain psum cannot reduce)
+#   psum_sketch         -- linear-table fast path: CountSketch tables psum
+#                          directly (the collective is itself a log-depth
+#                          tree inside XLA)
+
+
+def tree_merge(states: Sequence, merge_fn):
+    """Reduce a list of composable states pairwise: ceil(log2 D) rounds."""
+    states = list(states)
+    if not states:
+        raise ValueError("tree_merge of no states")
+    while len(states) > 1:
+        nxt = [merge_fn(states[i], states[i + 1])
+               for i in range(0, len(states) - 1, 2)]
+        if len(states) % 2:
+            nxt.append(states[-1])
+        states = nxt
+    return states[0]
+
+
+def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None):
+    """O(log D) all-merge inside ``shard_map`` for any composable state.
+
+    Requires a power-of-two axis; falls back to an all_gather + host-side
+    tree for ragged device counts (correct, one extra gather of state size).
+    """
+    if axis_size is None:
+        mesh = _CTX.mesh
+        assert mesh is not None, "butterfly_allmerge needs axis_size or mesh"
+        axis_size = mesh.shape[axis_name]
+    d = int(axis_size)
+    if d == 1:
+        return state
+    if d & (d - 1):  # not a power of two
+        gathered = jax.tree_util.tree_map(
+            lambda x: jax.lax.all_gather(x, axis_name), state)
+        shards = [jax.tree_util.tree_map(lambda x: x[i], gathered)
+                  for i in range(d)]
+        return tree_merge(shards, merge_fn)
+    for r in range(d.bit_length() - 1):
+        dist = 1 << r
+        perm = [(i, i ^ dist) for i in range(d)]
+        partner = jax.tree_util.tree_map(
+            lambda x: jax.lax.ppermute(x, axis_name, perm), state)
+        state = merge_fn(state, partner)
+    return state
+
+
+def psum_sketch(sketch, axis_names):
+    """Merge CountSketch shards across mesh axes via table psum (linearity)."""
+    return type(sketch)(table=jax.lax.psum(sketch.table, axis_names),
+                        seed=sketch.seed)

@@ -1,0 +1,23 @@
+"""SketchEngine: B independent WORp streams as one batched pytree.
+
+The engine layer turns the single-stream primitives in ``repro.core.worp``
+into a production data plane: vmapped update/estimate/sample over a leading
+stream axis, a batched Pallas fast path (one ``pallas_call`` for all B
+streams), and log-depth merge trees (host-side and in-shard_map) for
+collapsing shards into global state.
+"""
+from .engine import (  # noqa: F401
+    EngineConfig,
+    SketchEngine,
+    derive_stream_seeds,
+    onepass_init_batched,
+    onepass_merge_batched,
+    onepass_sample_batched,
+    onepass_update_batched,
+    onepass_update_dense,
+    reduce_streams,
+    twopass_init_batched,
+    twopass_merge_batched,
+    twopass_sample_batched,
+    twopass_update_batched,
+)

@@ -1,0 +1,280 @@
+"""Batched multi-stream WORp engine (the paper's composability, scaled out).
+
+A *batched state* is the single-stream state pytree from ``repro.core.worp``
+with a leading stream axis on every leaf: ``OnePassState.sketch.table`` is
+(B, rows, width), ``seed_transform`` is (B,), and so on.  Because states are
+plain pytrees, ``jax.vmap`` of the single-stream functions IS the batched
+engine -- the single-stream code in ``worp.py`` stays the canonical per-stream
+definition and the engine never re-implements sketch math.
+
+Two seeding regimes:
+  * independent (default): every stream hashes its own sketch/transform seeds
+    from the engine seed -- B statistically independent samplers (per-user,
+    per-layer, per-tenant streams).
+  * shared: all streams share seeds -- the B streams are SHARDS of one
+    logical stream, and ``reduce_streams`` collapses them to the union state
+    in O(log B) vmapped merge rounds (the paper's merge, as a tree).
+
+Data plane: ``onepass_update_dense`` routes dense per-stream segments through
+the batched Pallas kernel (``kernels.countsketch_update_batched``) so all B
+streams share one ``pallas_call``; the sketch is linear, so the kernel's
+(B, rows, width) delta just adds onto the batched tables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import countsketch, hashing, transforms, worp
+from repro.core.perfect import Sample
+from repro.kernels import ops
+
+_EMPTY = jnp.int32(-1)
+
+
+class EngineConfig(NamedTuple):
+    num_streams: int          # B: streams batched as one pytree
+    rows: int = 7
+    width: int = 2048
+    candidates: int = 512     # one-pass candidate buffer per stream
+    capacity: int = 512       # two-pass exact-frequency buffer per stream
+    p: float = 1.0
+    scheme: str = transforms.PPSWOR
+    seed: int = 0x5EED
+    shared_seeds: bool = False  # True => streams are mergeable shards
+
+
+def derive_stream_seeds(cfg: EngineConfig):
+    """Per-stream (sketch, transform) seed vectors, both (B,) uint32."""
+    b = jnp.arange(cfg.num_streams, dtype=jnp.uint32)
+    if cfg.shared_seeds:
+        ones = jnp.ones_like(b)
+        return (ones * jnp.uint32(cfg.seed),
+                ones * jnp.uint32(cfg.seed ^ 0xA5A5A5A5))
+    return (hashing.hash_u32(b, jnp.uint32(cfg.seed)),
+            hashing.hash_u32(b, jnp.uint32(cfg.seed) ^ jnp.uint32(0xA5A5A5A5)))
+
+
+# ---------------------------------------------------------------------------
+# batched one-pass WORp
+# ---------------------------------------------------------------------------
+
+def onepass_init_batched(cfg: EngineConfig) -> worp.OnePassState:
+    sk_seeds, t_seeds = derive_stream_seeds(cfg)
+    B = cfg.num_streams
+    return worp.OnePassState(
+        sketch=countsketch.CountSketch(
+            table=jnp.zeros((B, cfg.rows, cfg.width), jnp.float32),
+            seed=sk_seeds),
+        cand_keys=jnp.full((B, cfg.candidates), _EMPTY, jnp.int32),
+        seed_transform=t_seeds,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("p", "scheme"))
+def onepass_update_batched(st: worp.OnePassState, keys: jnp.ndarray,
+                           values: jnp.ndarray, p: float,
+                           scheme: str = transforms.PPSWOR):
+    """vmapped ``worp.onepass_update``: keys/values are (B, n)."""
+    return jax.vmap(
+        lambda s, k, v: worp.onepass_update(s, k, v, p, scheme)
+    )(st, keys, values)
+
+
+@jax.jit
+def onepass_merge_batched(a: worp.OnePassState, b: worp.OnePassState):
+    """Stream-wise merge of two batched states (same seeds stream-by-stream)."""
+    return jax.vmap(worp.onepass_merge)(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "p", "scheme"))
+def onepass_sample_batched(st: worp.OnePassState, k: int, p: float,
+                           scheme: str = transforms.PPSWOR) -> Sample:
+    """Per-stream WOR samples; every Sample leaf grows a leading (B,) axis."""
+    return jax.vmap(lambda s: worp.onepass_sample(s, k, p, scheme))(st)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret"))
+def onepass_update_dense(st: worp.OnePassState, values: jnp.ndarray,
+                         p: float, base_keys=None, lengths=None,
+                         scheme: str = transforms.PPSWOR,
+                         interpret: Optional[bool] = None):
+    """Fast path: B dense segments through ONE batched pallas_call.
+
+    ``values[b, i]`` is the frequency increment of key ``base_keys[b] + i``
+    for stream b (columns past ``lengths[b]`` ignored).  Only the PPSWOR
+    scheme is fused into the kernel; the candidate refresh stays on the
+    vmapped jnp path (it is O(C + n) estimates, not the data plane).
+    """
+    if scheme != transforms.PPSWOR:
+        raise ValueError("kernel fast path fuses the PPSWOR transform only")
+    B, n = values.shape
+    if base_keys is None:
+        base_keys = jnp.zeros((B,), jnp.uint32)
+    base_keys = jnp.broadcast_to(jnp.asarray(base_keys, jnp.uint32), (B,))
+    if lengths is None:
+        lengths = jnp.full((B,), n, jnp.int32)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    delta = ops.sketch_dense_batch(
+        values.astype(jnp.float32), st.sketch.table.shape[1],
+        st.sketch.table.shape[2], st.sketch.seed, p=p,
+        transform_seeds=st.seed_transform, base_keys=base_keys,
+        lengths=lengths, interpret=interpret)
+    sk = countsketch.CountSketch(table=st.sketch.table + delta,
+                                 seed=st.sketch.seed)
+
+    # candidate refresh (vmapped, same policy as worp.onepass_update)
+    offs = jnp.arange(n, dtype=jnp.int32)
+
+    def refresh(sk_b, cand_b, base_b, len_b):
+        keys_b = jnp.where(offs < len_b,
+                           base_b.astype(jnp.int32) + offs, _EMPTY)
+        all_keys = jnp.concatenate([cand_b, keys_b])
+        est = jnp.abs(countsketch.estimate(sk_b, all_keys))
+        est = jnp.where(all_keys == _EMPTY, -jnp.inf, est)
+        ck, _, _ = worp._dedup_topc(all_keys, jnp.zeros_like(est), est,
+                                    cand_b.shape[0])
+        return ck
+
+    cand = jax.vmap(refresh)(sk, st.cand_keys, base_keys, lengths)
+    return worp.OnePassState(sketch=sk, cand_keys=cand,
+                             seed_transform=st.seed_transform)
+
+
+# ---------------------------------------------------------------------------
+# batched two-pass WORp
+# ---------------------------------------------------------------------------
+
+def twopass_init_batched(cfg: EngineConfig) -> worp.TwoPassState:
+    _, t_seeds = derive_stream_seeds(cfg)
+    B = cfg.num_streams
+    return worp.TwoPassState(
+        keys=jnp.full((B, cfg.capacity), _EMPTY, jnp.int32),
+        freqs=jnp.zeros((B, cfg.capacity), jnp.float32),
+        priority=jnp.full((B, cfg.capacity), -jnp.inf, jnp.float32),
+        seed_transform=t_seeds,
+    )
+
+
+@jax.jit
+def twopass_update_batched(st: worp.TwoPassState,
+                           frozen: countsketch.CountSketch,
+                           keys: jnp.ndarray, values: jnp.ndarray):
+    """vmapped pass-II step; ``frozen`` is the batched pass-I sketch."""
+    return jax.vmap(worp.twopass_update)(st, frozen, keys, values)
+
+
+@jax.jit
+def twopass_merge_batched(a: worp.TwoPassState, b: worp.TwoPassState):
+    return jax.vmap(worp.twopass_merge)(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "p", "scheme"))
+def twopass_sample_batched(st: worp.TwoPassState, k: int, p: float,
+                           scheme: str = transforms.PPSWOR) -> Sample:
+    return jax.vmap(lambda s: worp.twopass_sample(s, k, p, scheme))(st)
+
+
+# ---------------------------------------------------------------------------
+# stream collapse: O(log B) merge tree over the leading axis
+# ---------------------------------------------------------------------------
+
+def reduce_streams(st, merge_batched):
+    """Collapse a batched state's B streams to ONE state in ceil(log2 B)
+    vmapped merge rounds (valid when streams share seeds, i.e. are shards).
+
+    Each round merges the first half with the second half stream-wise, so
+    round r performs B / 2^(r+1) merges as one vmapped call -- the same
+    O(log) shape as the distributed tree in ``repro.distributed.sharding``.
+    """
+    num = jax.tree_util.tree_leaves(st)[0].shape[0]
+    while num > 1:
+        half = num // 2
+        lo = jax.tree_util.tree_map(lambda x: x[:half], st)
+        hi = jax.tree_util.tree_map(lambda x: x[half:2 * half], st)
+        merged = merge_batched(lo, hi)
+        if num % 2:  # odd stream carries to the next round
+            carry = jax.tree_util.tree_map(lambda x: x[2 * half:], st)
+            merged = jax.tree_util.tree_map(
+                lambda m, c: jnp.concatenate([m, c], axis=0), merged, carry)
+        st, num = merged, half + (num % 2)
+    return jax.tree_util.tree_map(lambda x: x[0], st)
+
+
+# ---------------------------------------------------------------------------
+# stateful convenience wrapper
+# ---------------------------------------------------------------------------
+
+class SketchEngine:
+    """Holds a batched one-pass (and optionally two-pass) WORp state.
+
+    Thin object shell over the functional batched ops above -- all state is
+    jax pytrees, so an engine can live inside jit/scan via its ``.state``.
+    """
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self.state = onepass_init_batched(cfg)
+        self.pass2: Optional[worp.TwoPassState] = None
+
+    @property
+    def num_streams(self) -> int:
+        return self.cfg.num_streams
+
+    # -- pass I -------------------------------------------------------------
+    def update(self, keys, values):
+        """Sparse element batches: keys/values (B, n) int32/float32."""
+        self.state = onepass_update_batched(self.state, keys, values,
+                                            self.cfg.p, self.cfg.scheme)
+        return self
+
+    def update_dense(self, values, base_keys=None, lengths=None,
+                     interpret=None):
+        """Dense segments through the batched Pallas kernel (one call)."""
+        self.state = onepass_update_dense(self.state, values, self.cfg.p,
+                                          base_keys=base_keys,
+                                          lengths=lengths,
+                                          interpret=interpret)
+        return self
+
+    def merge_with(self, other: "SketchEngine"):
+        """Stream-wise union with another engine (same cfg + seeds)."""
+        self.state = onepass_merge_batched(self.state, other.state)
+        return self
+
+    def sample(self, k: int) -> Sample:
+        return onepass_sample_batched(self.state, k, self.cfg.p,
+                                      self.cfg.scheme)
+
+    def estimate(self, keys) -> jnp.ndarray:
+        """Per-stream transformed-domain estimates for (B, n) keys."""
+        return jax.vmap(countsketch.estimate)(self.state.sketch, keys)
+
+    # -- pass II ------------------------------------------------------------
+    def freeze(self):
+        """Freeze pass-I priorities and start batched pass II."""
+        self.pass2 = twopass_init_batched(self.cfg)
+        return self
+
+    def update_pass2(self, keys, values):
+        assert self.pass2 is not None, "call freeze() before pass II"
+        self.pass2 = twopass_update_batched(self.pass2, self.state.sketch,
+                                            keys, values)
+        return self
+
+    def sample_exact(self, k: int) -> Sample:
+        assert self.pass2 is not None, "call freeze() before pass II"
+        return twopass_sample_batched(self.pass2, k, self.cfg.p,
+                                      self.cfg.scheme)
+
+    # -- shard collapse -----------------------------------------------------
+    def collapse(self) -> worp.OnePassState:
+        """Merge all B streams into one state (requires shared_seeds)."""
+        if not self.cfg.shared_seeds:
+            raise ValueError("collapse() requires shared_seeds=True "
+                             "(independent streams are not mergeable)")
+        return reduce_streams(self.state, onepass_merge_batched)

@@ -21,6 +21,15 @@ sketch up to the width-block re-read factor ceil(W / WB).
 
 Grid: (width_blocks, n_blocks), n innermost => the table block for width
 block j accumulates over all n blocks before moving on.
+
+Batched variant (``countsketch_update_batched``): the grid grows a LEADING
+BATCH dimension (batch_blocks, width_blocks, n_blocks) so B independent
+streams share one ``pallas_call`` instead of a Python loop of B dispatches.
+Each kernel invocation processes a (block_b, block_n) tile of streams at
+once -- per-stream seeds/base-keys/lengths ride in a (B, 128) meta table --
+and the one-hot scatter becomes a BATCHED matmul (B contractions on the MXU,
+one numpy einsum in interpret mode), amortizing dispatch + hash + iota
+overhead across streams.  This is the SketchEngine data-plane fast path.
 """
 from __future__ import annotations
 
@@ -134,3 +143,132 @@ def countsketch_update(
         name="worp_countsketch_update",
     )(meta, vals)
     return table[:, :width]
+
+
+# ---------------------------------------------------------------------------
+# batched multi-stream kernel (SketchEngine fast path)
+# ---------------------------------------------------------------------------
+
+# meta table layout, one row per stream (padded to a 128-lane tile):
+_META_SEED, _META_TSEED, _META_BASE, _META_N = 0, 1, 2, 3
+_META_COLS = 128
+
+
+def _batched_kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
+                    block_n: int, block_w: int, p: float | None):
+    # grid = (batch_blocks, width_blocks, n_blocks); n innermost so each
+    # (stream-block, width-block) table tile accumulates over the stream.
+    j = pl.program_id(1)  # width block
+    i = pl.program_id(2)  # value block
+
+    @pl.when(i == 0)
+    def _init():
+        table_ref[...] = jnp.zeros_like(table_ref)
+
+    seed = meta_ref[:, _META_SEED:_META_SEED + 1].astype(jnp.uint32)   # (B,1)
+    tseed = meta_ref[:, _META_TSEED:_META_TSEED + 1].astype(jnp.uint32)
+    base = meta_ref[:, _META_BASE:_META_BASE + 1].astype(jnp.uint32)
+    n_valid = meta_ref[:, _META_N:_META_N + 1]                         # (B,1)
+
+    vals = vals_ref[...].astype(jnp.float32)  # (B, N)
+    offs = i * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_n), 1)           # (1, N)
+    valid = offs < n_valid                    # (B, N) -- ragged streams
+    keys = base + offs.astype(jnp.uint32)     # (B, N) per-stream key spaces
+
+    if p is not None:
+        r_x = hashing.exp1(keys, tseed)       # per-stream transform seeds
+        vals = vals * r_x ** jnp.float32(-1.0 / p)
+    vals = jnp.where(valid, vals, 0.0)
+
+    col0 = j * block_w
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_w), 1) + col0
+
+    contribs = []
+    for r in range(rows):
+        salt = hashing.row_salt(seed, jnp.uint32(r))          # (B, 1)
+        bucket = hashing.bucket_hash(keys, salt, width)       # (B, N)
+        sign = hashing.sign_hash(keys, salt)                  # (B, N)
+        sv = (sign * vals)[:, None, :]                        # (B, 1, N)
+        onehot = (bucket[:, :, None] == cols[None]).astype(jnp.float32)
+        contribs.append(
+            jax.lax.dot_general(
+                sv, onehot,  # batched contraction: B streams on the MXU
+                dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )  # (B, 1, WB)
+        )
+    table_ref[...] += jnp.concatenate(contribs, axis=1)  # (B, rows, WB)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "width", "p", "block_n", "block_w", "block_b",
+                     "interpret"),
+)
+def countsketch_update_batched(
+    values: jnp.ndarray,
+    rows: int,
+    width: int,
+    seeds: jnp.ndarray,
+    p: float | None = None,
+    transform_seeds=None,
+    base_keys=None,
+    lengths=None,
+    block_n: int = 512,
+    block_w: int = 1024,
+    block_b: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Sketch B dense vector segments in ONE pallas_call; (B, rows, width).
+
+    ``values`` is (B, n): stream b holds the frequencies of keys
+    ``base_keys[b] + [0, lengths[b])``; columns past ``lengths[b]`` are
+    ignored, so ragged streams (e.g. model layers of different sizes) batch
+    together.  ``seeds``/``transform_seeds`` are per-stream (B,) so streams
+    stay statistically independent unless deliberately seeded equal.
+    """
+    B, n = values.shape
+    seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32), (B,))
+    if transform_seeds is None:
+        transform_seeds = jnp.zeros((B,), jnp.uint32)
+    transform_seeds = jnp.broadcast_to(
+        jnp.asarray(transform_seeds, jnp.uint32), (B,))
+    if base_keys is None:
+        base_keys = jnp.zeros((B,), jnp.uint32)
+    base_keys = jnp.broadcast_to(jnp.asarray(base_keys, jnp.uint32), (B,))
+    if lengths is None:
+        lengths = jnp.full((B,), n, jnp.int32)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    block_w = min(block_w, _pad_to(width, 128))
+    block_n = min(block_n, _pad_to(n, 128))
+    block_b = min(block_b, _pad_to(B, 8))
+    n_pad = _pad_to(n, block_n)
+    w_pad = _pad_to(width, block_w)
+    b_pad = _pad_to(B, block_b)
+
+    vals = jnp.pad(values, ((0, b_pad - B), (0, n_pad - n)))
+    meta = jnp.zeros((b_pad, _META_COLS), jnp.int32)
+    meta = meta.at[:B, _META_SEED].set(seeds.astype(jnp.int32))
+    meta = meta.at[:B, _META_TSEED].set(transform_seeds.astype(jnp.int32))
+    meta = meta.at[:B, _META_BASE].set(base_keys.astype(jnp.int32))
+    # padded streams get length 0 => contribute nothing
+    meta = meta.at[:B, _META_N].set(lengths)
+
+    grid = (b_pad // block_b, w_pad // block_w, n_pad // block_n)
+    table = pl.pallas_call(
+        functools.partial(_batched_kernel, rows=rows, width=width,
+                          block_n=block_n, block_w=block_w, p=p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, _META_COLS), lambda b, j, i: (b, 0)),
+            pl.BlockSpec((block_b, block_n), lambda b, j, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((block_b, rows, block_w),
+                               lambda b, j, i: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, rows, w_pad), jnp.float32),
+        interpret=interpret,
+        name="worp_countsketch_update_batched",
+    )(meta, vals)
+    return table[:B, :, :width]

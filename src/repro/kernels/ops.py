@@ -10,7 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .countsketch_update import countsketch_update as _update
+from .countsketch_update import (
+    countsketch_update as _update,
+    countsketch_update_batched as _update_batched,
+)
 from .countsketch_query import (
     countsketch_query as _query,
     countsketch_estimate as _estimate,
@@ -30,6 +33,19 @@ def sketch_dense_vector(values, rows, width, seed, p=None, transform_seed=0,
     return _update(values, rows, width, seed, p=p,
                    transform_seed=transform_seed, base_key=base_key,
                    interpret=interpret, **kw)
+
+
+def sketch_dense_batch(values, rows, width, seeds, p=None,
+                       transform_seeds=None, base_keys=None, lengths=None,
+                       interpret=None, **kw):
+    """CountSketch B dense segments in one batched pallas_call -> (B, rows,
+    width).  The SketchEngine fast path; see countsketch_update_batched."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _update_batched(values, rows, width, seeds, p=p,
+                           transform_seeds=transform_seeds,
+                           base_keys=base_keys, lengths=lengths,
+                           interpret=interpret, **kw)
 
 
 def query_rows(table, keys, seed, interpret=None, **kw):

@@ -9,19 +9,29 @@ device state (the dry-run must set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.37; default axis types are Auto there
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def make_mesh_auto(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where the API exists."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (smoke tests / examples)."""
     n = len(jax.devices())
     mp = model_parallel if n % max(model_parallel, 1) == 0 else 1
-    return jax.make_mesh((n // mp, mp), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh_auto((n // mp, mp), ("data", "model"))

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma_9b \
         --reduced --tokens 16
+
+With ``--worp-topk K`` every request (batch row) additionally feeds its
+decoded token ids into one stream of a batched SketchEngine -- the serving
+tie-in the paper motivates (per-user token-frequency WOR samples, mergeable
+across serving replicas) -- and the per-request top tokens print at the end.
 """
 import argparse
 
@@ -10,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCH_NAMES, get_config
+from repro.engine import EngineConfig, SketchEngine
 from repro.models import model as M
 from repro.models import transformer as T
 
@@ -21,7 +27,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--worp-topk", type=int, default=0,
+                    help="track per-request token streams in a batched "
+                         "SketchEngine and report the top-K WOR sample")
+    ap.add_argument("--worp-p", type=float, default=1.0)
     args = ap.parse_args()
+    if args.worp_topk < 0:
+        ap.error("--worp-topk must be >= 0")
+    if args.worp_topk and args.worp_p <= 0:
+        ap.error("--worp-p must be > 0 (samples by |freq|^p)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -51,15 +65,35 @@ def main():
     step = jax.jit(lambda p, b: T.forward_decode(p, b, cfg))
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     pos0 = S + (cfg.num_patches if cfg.family == "vlm" else 0)
+    engine = None
+    if args.worp_topk:
+        # one engine stream per request; prompt tokens seed the streams
+        engine = SketchEngine(EngineConfig(
+            num_streams=B, rows=5, width=max(256, 31 * args.worp_topk),
+            candidates=4 * args.worp_topk, p=args.worp_p, seed=0x5EED))
+        engine.update(batch["tokens"],
+                      jnp.ones_like(batch["tokens"], jnp.float32))
+        engine.update(tok, jnp.ones_like(tok, jnp.float32))
     outs = [np.asarray(tok)]
     for i in range(args.tokens):
         lg, cache = step(params, {"token": tok, "pos": jnp.int32(pos0 + i),
                                   "cache": cache})
         tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         outs.append(np.asarray(tok))
+        if engine is not None:
+            engine.update(tok, jnp.ones_like(tok, jnp.float32))
     print("generated ids:")
     for row in np.concatenate(outs, axis=1):
         print(" ", row.tolist())
+    if engine is not None:
+        sample = engine.sample(args.worp_topk)
+        keys, freqs = np.asarray(sample.keys), np.asarray(sample.freqs)
+        print(f"per-request top-{args.worp_topk} tokens "
+              f"(WOR ell_{args.worp_p} sample):")
+        for b in range(B):
+            pairs = [f"{int(t)}:{f:.0f}" for t, f in zip(keys[b], freqs[b])
+                     if t >= 0]
+            print(f"  req {b}: {' '.join(pairs)}")
 
 
 if __name__ == "__main__":

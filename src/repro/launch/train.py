@@ -35,9 +35,9 @@ def main():
     mesh = None
     cc = None
     if args.compressed:
+        from repro.launch.mesh import make_mesh_auto
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_auto((n,), ("data",))
         cc = gradcomp.CompressorConfig()
     out = loop.run_training(
         cfg, num_steps=args.steps, batch=args.batch, seq=args.seq,

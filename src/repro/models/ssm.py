@@ -94,10 +94,13 @@ def ssd_chunked(x, dt, A, B_, C_, D_, dims: SSMDims, chunk: int = 128,
     total = cum[:, :, -1]  # (B,nc,H)
 
     # ---- intra-chunk (dual quadratic form) ----
-    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
-    Lmat = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Qi,Qj,H)
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0.  Mask INSIDE the exp:
+    # anti-causal exponents are positive and overflow fp32 (exp(>88) = inf),
+    # and where(mask, inf, 0) is finite forward but NaN backward (0 * inf in
+    # the cotangent); exp(-inf) = 0 is clean in both passes.
+    ldiff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
     causal = jnp.tril(jnp.ones((chunk, chunk), bool))
-    Lmat = jnp.where(causal[None, None, :, :, None], Lmat, 0.0)
+    Lmat = jnp.exp(jnp.where(causal[None, None, :, :, None], ldiff, -jnp.inf))
     scores = jnp.einsum("bcign,bcjgn->bcijg", Cc.astype(jnp.float32),
                         Bc.astype(jnp.float32))  # (B,nc,Qi,Qj,G)
     scores = jnp.repeat(scores, rep, axis=-1)  # -> (B,nc,Qi,Qj,H)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.core import countsketch, transforms
+from repro.kernels import ops as kernel_ops
 
 _NEG = jnp.float32(-jnp.inf)
 
@@ -238,5 +239,105 @@ def tree_compress_step_sharded(grads, error, cc: CompressorConfig,
     stats = {"comm_floats": jnp.float32(
         cc.rows * cc.width + (2 * cc.k if cc.mode == "twopass" else 0)),
         "dense_floats": jnp.float32(sum(sizes))}
+    return (jax.tree_util.tree_unflatten(treedef, sparse_leaves),
+            jax.tree_util.tree_unflatten(treedef, err_leaves), stats)
+
+
+# ---------------------------------------------------------------------------
+# SketchEngine path: per-LAYER gradient streams, one batched pallas_call
+# ---------------------------------------------------------------------------
+
+def tree_compress_step_engine(grads, error, cc: CompressorConfig,
+                              axis_names: Sequence[str],
+                              k_per_leaf: int = 32,
+                              cand_per_leaf: int = 64):
+    """WORp compression with one WOR sample PER LAYER (engine data plane).
+
+    Each gradient leaf is one stream of the batched engine: all leaves'
+    sketches are computed by a single batched ``pallas_call`` (ragged lengths
+    mask the padding), the (L, rows, width) table block psums across the DP
+    axes, and each layer's top-``k_per_leaf`` sample decodes from its own
+    table.  Per-layer sampling keeps every layer represented in the update
+    (a flat top-k starves small layers next to embedding-sized ones) at the
+    cost of ``L x rows x width`` comm -- use a narrower width per stream.
+
+    Values are exact pass-II psums ('twopass') or Eq.-(6) estimates.
+
+    Memory note: leaves pad to the LARGEST leaf (O(L * n_max) transient) --
+    right for the per-layer regime this path targets (transformer blocks of
+    comparable size); for trees dominated by one embedding-sized leaf plus
+    hundreds of small ones, use ``tree_compress_step_sharded`` (O(sum n))
+    or bucket the leaves by size before calling.
+    """
+    import numpy as np
+
+    leaves_g = jax.tree_util.tree_leaves(grads)
+    leaves_e = jax.tree_util.tree_leaves(error)
+    sizes = [int(np.prod(l.shape)) for l in leaves_g]
+    L, n_max = len(leaves_g), max(sizes)
+
+    accs = [g.astype(jnp.float32).reshape(-1) + e.reshape(-1)
+            for g, e in zip(leaves_g, leaves_e)]
+    a_pad = jnp.stack([jnp.pad(a, (0, n_max - s))
+                       for a, s in zip(accs, sizes)])           # (L, n_max)
+    lengths = jnp.asarray(sizes, jnp.int32)
+    t_seeds = jnp.asarray([_leaf_salt(cc, li) for li in range(L)], jnp.uint32)
+    sk_seeds = t_seeds ^ jnp.uint32(1)
+
+    # 1. batched sketch of all layers in one kernel dispatch
+    tables = kernel_ops.sketch_dense_batch(
+        a_pad, cc.rows, cc.width, sk_seeds, p=cc.p,
+        transform_seeds=t_seeds, lengths=lengths)               # (L, R, W)
+    tables = jax.lax.psum(tables, axis_names)                   # merge shards
+
+    # 2. per-layer candidate proposals, unioned across workers.  ncand is
+    # NOT coupled to the smallest leaf: leaves shorter than ncand pad their
+    # proposal slots with tie-broken zero entries whose ids may lie past the
+    # leaf's end -- those decode to exact value 0 and the final scatter
+    # drops out-of-range ids, so they only waste slots, never corrupt.
+    ncand = min(cand_per_leaf, n_max)
+    _, cand = jax.lax.top_k(jnp.abs(jnp.where(
+        jnp.arange(n_max) < lengths[:, None], a_pad, 0.0)), ncand)
+    cand = jax.lax.all_gather(cand.astype(jnp.int32), axis_names,
+                              tiled=True, axis=1)               # (L, D*ncand)
+    # top_k needs k+1 <= candidate count (D*ncand can be tiny on 1 device)
+    k_leaf = min(k_per_leaf, cand.shape[1] - 1)
+
+    # 3. per-layer decode from the layer's own merged table
+    def decode_leaf(table, cand_l, t_seed, sk_seed):
+        sk = countsketch.CountSketch(table=table, seed=sk_seed)
+        est = countsketch.estimate(sk, cand_l)
+        ids, score = _dedup_ids(cand_l, jnp.abs(est))
+        top_score, top_i = jax.lax.top_k(score, k_leaf + 1)
+        sel = ids[top_i[:k_leaf]]
+        est_v = transforms.invert_frequency(
+            sel.astype(jnp.uint32), countsketch.estimate(sk, sel), cc.p,
+            t_seed)
+        return sel, est_v, top_score[k_leaf]
+
+    sel, est_vals, tau = jax.vmap(decode_leaf)(tables, cand, t_seeds,
+                                               sk_seeds)        # (L, k), ...
+
+    nworkers = jax.lax.psum(jnp.float32(1.0), axis_names)
+    if cc.mode == "twopass":
+        exact_local = jnp.take_along_axis(a_pad, sel, axis=1)   # (L, k)
+        vals = jax.lax.psum(exact_local, axis_names) / nworkers
+    else:
+        vals = est_vals / nworkers
+
+    sparse_leaves, err_leaves = [], []
+    for li, (a, size, g) in enumerate(zip(accs, sizes, leaves_g)):
+        sp = jnp.zeros((size,), jnp.float32).at[sel[li]].set(vals[li])
+        sparse_leaves.append(sp.reshape(g.shape))
+        err_leaves.append(jnp.where(sp != 0.0, 0.0, a).reshape(g.shape))
+
+    treedef = jax.tree_util.tree_structure(grads)
+    stats = {
+        "comm_floats": jnp.float32(
+            L * cc.rows * cc.width
+            + (2 * L * k_leaf if cc.mode == "twopass" else 0)),
+        "dense_floats": jnp.float32(sum(sizes)),
+        "tau": tau,
+    }
     return (jax.tree_util.tree_unflatten(treedef, sparse_leaves),
             jax.tree_util.tree_unflatten(treedef, err_leaves), stats)

@@ -1,0 +1,69 @@
+"""Optional-hypothesis shim: real hypothesis when installed, else a minimal
+seeded fallback so the property tests still execute on a bare CPU-jax env.
+
+The fallback implements exactly the subset the suite uses (``st.integers``,
+``@given``, ``@settings``) and draws examples from a deterministic PRNG, so
+``python -m pytest -q`` is reproducible without extra installs.  Installing
+``hypothesis`` (see requirements-dev.txt) upgrades the same tests to true
+shrinking property tests with no code change.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # bare environment: deterministic fallback
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Integers:
+        def __init__(self, min_value: int, max_value: int):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def draw(self, rng: random.Random) -> int:
+            return rng.randint(self.min_value, self.max_value)
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                # crc32, not hash(): str hashing is randomized per process,
+                # which would make failures irreproducible across runs
+                rng = random.Random(
+                    0xC0FFEE ^ zlib.crc32(fn.__qualname__.encode()))
+                # edge-case pass: all-min, all-max
+                for pick in ("min_value", "max_value"):
+                    vals = [getattr(s, pick) for s in strategies]
+                    fn(*args, *vals, **kwargs)
+                for _ in range(max(0, n - 2)):
+                    vals = [s.draw(rng) for s in strategies]
+                    fn(*args, *vals, **kwargs)
+
+            # NOTE: no functools.wraps -- pytest must see the (*args)
+            # signature, not the wrapped one (whose extra params would be
+            # misread as fixtures).
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples",
+                                            _DEFAULT_EXAMPLES)
+            return wrapper
+
+        return deco

@@ -1,0 +1,125 @@
+"""Coverage for the previously-untested WORp paths: the Sec. 4.1 extended
+(certified) sample and the Appendix A failure test.
+
+The certified mask is checked against a brute-force numpy re-derivation from
+the pass-II state contents AND against the ground-truth frequency vector
+(every key whose true nu* clears the certification bar must be certified).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import countsketch, transforms, worp
+from tests.conftest import zipf_freqs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _run_two_pass(freqs, k, p, seed_t, rows=7, width=None):
+    n = len(freqs)
+    width = width or 31 * k
+    keys = jnp.arange(n)
+    fv = jnp.asarray(freqs)
+    st1 = worp.onepass_init(rows, width, candidates=4 * k, seed_sketch=3,
+                            seed_transform=seed_t)
+    step = (n + 3) // 4
+    for lo in range(0, n, step):
+        st1 = worp.onepass_update(st1, keys[lo:lo + step], fv[lo:lo + step],
+                                  p)
+    st2 = worp.twopass_init(capacity=2 * (k + 1), seed_transform=seed_t)
+    for lo in range(0, n, step):
+        st2 = worp.twopass_update(st2, st1.sketch, keys[lo:lo + step],
+                                  fv[lo:lo + step])
+    return st1, st2
+
+
+class TestExtendedSample:
+    @pytest.mark.parametrize("p,alpha", [(1.0, 2.0), (2.0, 1.5), (0.5, 1.5)])
+    def test_mask_matches_bruteforce(self, p, alpha):
+        """certified/tau == a from-scratch numpy re-derivation of Sec 4.1."""
+        n, k, seed_t = 2000, 20, 13
+        freqs = zipf_freqs(n, alpha, seed=11)
+        _, st2 = _run_two_pass(freqs, k, p, seed_t)
+        certified, tau = worp.twopass_extended_sample(st2, k, p)
+
+        skeys = np.asarray(st2.keys)
+        sfreqs = np.asarray(st2.freqs)
+        sprio = np.asarray(st2.priority)
+        live = skeys != -1
+        safe = np.where(live, skeys, 0)
+        r = np.asarray(transforms.randomizer(jnp.asarray(safe), seed_t))
+        mag = np.where(live, np.abs(sfreqs * r ** (-1.0 / p)), -np.inf)
+        kth1 = np.sort(mag)[::-1][k]  # (k+1)-st largest
+        err = kth1 / 3.0
+        L = np.min(np.where(live, sprio, np.inf))
+        want_mask = mag >= (L + err)
+        want_tau = np.min(np.where(want_mask, mag, np.inf))
+
+        assert np.array_equal(np.asarray(certified), want_mask)
+        assert float(tau) == pytest.approx(float(want_tau), rel=1e-6)
+
+    def test_certified_keys_are_true_top(self):
+        """Certification is sound: the certified set is exactly a prefix of
+        the TRUE nu* order (no uncertified key may outrank a certified one
+        when the buffer retained everything above L)."""
+        n, k, p, seed_t = 2000, 20, 1.0, 13
+        freqs = zipf_freqs(n, 2.0, seed=11)
+        _, st2 = _run_two_pass(freqs, k, p, seed_t)
+        certified, tau = worp.twopass_extended_sample(st2, k, p)
+        m = int(certified.sum())
+        assert m >= k  # extends the plain top-k sample
+
+        tstar = np.abs(np.asarray(transforms.transform_frequencies(
+            jnp.arange(n), jnp.asarray(freqs), p, seed_t)))
+        true_top_m = set(np.argsort(-tstar)[:m].tolist())
+        cert_keys = set(np.asarray(st2.keys)[np.asarray(certified)].tolist())
+        assert cert_keys == true_top_m
+
+    def test_certified_frequencies_exact(self):
+        """Certified keys carry EXACT frequencies (pass II accumulates)."""
+        n, k, p, seed_t = 1500, 16, 1.0, 5
+        freqs = zipf_freqs(n, 2.0, seed=12)
+        _, st2 = _run_two_pass(freqs, k, p, seed_t)
+        certified, _ = worp.twopass_extended_sample(st2, k, p)
+        ks = np.asarray(st2.keys)[np.asarray(certified)]
+        fs = np.asarray(st2.freqs)[np.asarray(certified)]
+        np.testing.assert_allclose(fs, freqs[ks], rtol=1e-5)
+
+    def test_tau_bounded_by_kth(self):
+        """The certified threshold never exceeds the k-th sample's nu*."""
+        n, k, p, seed_t = 1500, 16, 1.0, 99
+        freqs = zipf_freqs(n, 1.5, seed=13)
+        _, st2 = _run_two_pass(freqs, k, p, seed_t)
+        sample = worp.twopass_sample(st2, k, p)
+        _, tau = worp.twopass_extended_sample(st2, k, p)
+        assert float(tau) <= float(np.abs(np.asarray(
+            sample.transformed)).min()) + 1e-6
+
+
+class TestFailureTest:
+    def test_well_provisioned_passes(self):
+        """k x 31 sketch on Zipf data: the failure flag must NOT fire."""
+        n, k, p, seed_t = 2000, 20, 1.0, 7
+        freqs = zipf_freqs(n, 2.0, seed=14)
+        st1, st2 = _run_two_pass(freqs, k, p, seed_t)
+        sample = worp.twopass_sample(st2, k, p)
+        assert not bool(worp.failure_test(st1.sketch, sample, k, p))
+
+    def test_underprovisioned_fires(self):
+        """A width-8 single-row sketch cannot resolve 2000 keys: the k-th
+        estimate drowns in sketch noise and the flag fires."""
+        n, k, p, seed_t = 2000, 20, 1.0, 7
+        freqs = zipf_freqs(n, 1.2, seed=15)  # flat tail = heavy noise
+        st1, st2 = _run_two_pass(freqs, k, p, seed_t, rows=1, width=8)
+        sample = worp.twopass_sample(st2, k, p)
+        assert bool(worp.failure_test(st1.sketch, sample, k, p))
+
+    def test_flag_is_scalar_bool(self):
+        n, k, p = 500, 8, 1.0
+        freqs = zipf_freqs(n, 2.0, seed=16)
+        st1, st2 = _run_two_pass(freqs, k, p, 3)
+        flag = worp.failure_test(st1.sketch, worp.twopass_sample(st2, k, p),
+                                 k, p)
+        assert flag.shape == ()
+        assert flag.dtype == jnp.bool_
