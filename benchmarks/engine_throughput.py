@@ -1,13 +1,17 @@
 """SketchEngine throughput: batched multi-stream data plane vs Python loops.
 
-Three measurements (interpret-mode wall times on CPU; on TPU the same calls
+Four measurements (interpret-mode wall times on CPU; on TPU the same calls
 compile via Mosaic and the batched matmul additionally packs the MXU):
 
-  * kernel path: ONE batched pallas_call over B streams vs B single-stream
+  * update kernel: ONE batched pallas_call over B streams vs B single-stream
     pallas_call dispatches (the acceptance ratio for the engine data plane)
-  * vmap path:   batched ``onepass_update`` vs a Python loop of single-stream
-    updates (sparse keyed batches, the control-plane path)
-  * merge tree:  O(log B) ``reduce_streams`` collapse vs sequential merging
+  * query kernel:  ONE batched estimate pallas_call (the path behind
+    ``onepass_sample_batched`` and the dense candidate refresh) vs B
+    single-stream query dispatches, with a parity guard against the
+    pure-jnp ``ref`` oracle
+  * vmap path:     registry-spec batched ``update`` vs a Python loop of
+    single-stream spec updates (sparse keyed batches, the control plane)
+  * merge tree:    O(log B) ``reduce_streams`` collapse vs sequential merging
 
 CSV derived column reports the batched/looped ratio directly.
 """
@@ -50,23 +54,22 @@ def run(verbose: bool = True, fast: bool = False):
     rows.append((f"engine_kernel_looped_B{B_STREAMS}_n{n}", us_l,
                  f"batched_speedup={us_l / us_b:.2f}x"))
 
-    # -- vmap control plane: batched update vs Python loop ------------------
+    # -- vmap control plane (through the sampler registry) ------------------
     cfg = E.EngineConfig(num_streams=B_STREAMS, rows=5, width=31 * 32,
                          candidates=128, p=1.0, seed=3)
+    spec = E.engine_spec(cfg)
+    bops = E.batched_ops(spec)
     nk = 512 if fast else 1024
     keys = jnp.asarray(rng.integers(0, 100_000, (B_STREAMS, nk)), jnp.int32)
     kvals = jnp.asarray(
         rng.normal(size=(B_STREAMS, nk)).astype(np.float32))
-    st0 = E.onepass_init_batched(cfg)
     sks, tss = E.derive_stream_seeds(cfg)
-    from repro.core import worp
-    singles = [worp.onepass_init(cfg.rows, cfg.width, cfg.candidates,
-                                 sks[b], tss[b]) for b in range(B_STREAMS)]
-    single_update = jax.jit(
-        lambda s, k, v: worp.onepass_update(s, k, v, cfg.p))
+    st0 = bops.init(sks, tss)
+    singles = [spec.init(sks[b], tss[b]) for b in range(B_STREAMS)]
+    single_update = jax.jit(spec.update)
 
     def vmap_batched():
-        return E.onepass_update_batched(st0, keys, kvals, cfg.p)
+        return bops.update(st0, keys, kvals)
 
     def vmap_looped():
         return [single_update(singles[b], keys[b], kvals[b])
@@ -78,6 +81,39 @@ def run(verbose: bool = True, fast: bool = False):
                  f"ns_per_elem={us_vb * 1e3 / (B_STREAMS * nk):.2f}"))
     rows.append((f"engine_vmap_looped_B{B_STREAMS}_n{nk}", us_vl,
                  f"batched_speedup={us_vl / us_vb:.2f}x"))
+
+    # -- query plane: batched estimate kernel vs B single-stream dispatches -
+    # (the path behind onepass_sample_batched / the dense candidate refresh)
+    stq = vmap_batched()
+    tables, qseeds = stq.sketch.table, stq.sketch.seed
+    cand = stq.cand_keys                                     # (B, C)
+
+    def query_kernel_batched():
+        return ops.estimate_batched(tables, cand, qseeds, use_kernel=True,
+                                    interpret=True)
+
+    def query_kernel_looped():
+        return [ops.estimate(tables[b], cand[b], qseeds[b], interpret=True)
+                for b in range(B_STREAMS)]
+
+    def query_ref_jnp():
+        return ops.estimate_batched(tables, cand, qseeds, use_kernel=False)
+
+    # parity guard: the CSV speedup row is only meaningful if the kernel
+    # matches the ref.py oracle to fp32 tolerance
+    np.testing.assert_allclose(np.asarray(query_kernel_batched()),
+                               np.asarray(query_ref_jnp()),
+                               rtol=1e-5, atol=1e-5)
+    us_qb = timeit(query_kernel_batched)
+    us_ql = timeit(query_kernel_looped)
+    us_qr = timeit(query_ref_jnp)
+    C = cand.shape[1]
+    rows.append((f"engine_query_kernel_batched_B{B_STREAMS}_k{C}", us_qb,
+                 f"ns_per_key={us_qb * 1e3 / (B_STREAMS * C):.2f}"))
+    rows.append((f"engine_query_kernel_looped_B{B_STREAMS}_k{C}", us_ql,
+                 f"batched_speedup={us_ql / us_qb:.2f}x"))
+    rows.append((f"engine_query_ref_jnp_B{B_STREAMS}_k{C}", us_qr,
+                 f"ref_over_kernel={us_qr / us_qb:.2f}x"))
 
     # -- merge tree: log-depth stream collapse vs sequential ----------------
     mcfg = E.EngineConfig(num_streams=B_STREAMS, rows=5, width=31 * 32,

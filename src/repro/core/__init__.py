@@ -10,8 +10,10 @@ from . import (  # noqa: F401
     hashing,
     perfect,
     psi,
+    sampler,
     transforms,
     tv_sampler,
     worp,
 )
 from .perfect import Sample  # noqa: F401
+from .sampler import SamplerConfig, SamplerSpec, make_sampler  # noqa: F401

@@ -1,0 +1,321 @@
+"""Unified Sampler protocol: every WOR ell_p sampler as one composable spec.
+
+The paper's central claim is *composability*: a WOR sampler is an
+(init, update, merge, sample) quadruple over a fixed-shape pytree state.
+``SamplerSpec`` freezes that quadruple (plus ``estimate`` and an optional
+exact second pass) behind one uniform signature so that every layer above
+core -- the batched ``SketchEngine``, the distributed merge trees, gradient
+compression, serving, benchmarks -- is written once against the protocol and
+works for ANY registered sampler.
+
+Uniform signatures (static config is closed over at spec-construction time):
+
+  init(seed_sketch, seed_transform) -> state      two uint32 scalars; both
+                                                  vmappable, so a batched
+                                                  engine is jax.vmap(init)
+  update(state, keys, values)      -> state       one element batch
+  merge(a, b)                      -> state       state of the union
+  sample(state, k)                 -> Sample      k static
+  estimate(state, keys)            -> array       transformed-domain nu*-hat
+
+Optional exact second pass (two-pass WORp, Algorithm 2):
+
+  init2(state)                      -> state2     priorities FROZEN from state
+  update2(state2, state, keys, values) -> state2  exact-frequency replay
+  merge2(a2, b2)                    -> state2
+  sample2(state2, k)                -> Sample
+
+Registry: ``register(name)`` decorates a ``SamplerConfig -> SamplerSpec``
+factory; ``make_sampler(name, cfg)`` is lru-cached so the same (name, cfg)
+returns the SAME spec object -- downstream jit caches key off spec identity.
+
+Registered samplers (both bottom-k schemes via ``cfg.scheme``):
+  "onepass"  one-pass WORp (Sec. 5): CountSketch + candidate buffer,
+             estimated frequencies; pass-II hooks give exact Algorithm 2.
+  "twopass"  streaming two-pass WORp: carries BOTH the pass-I sketch and the
+             pass-II exact-frequency buffer in one state.  The single-phase
+             ``update`` keys the buffer by *online* priorities (the sketch so
+             far), an approximation of Algorithm 2's frozen priorities; the
+             pass-II hooks provide the exact frozen-priority replay.
+  "perfect"  oracle over an explicit (domain,)-sized frequency vector --
+             ground truth for tests/benchmarks, same protocol shape.
+  "tv"       Algorithm 1 low-variation-distance cascade (Sec. 6): r linear
+             single-draw samplers + an rHH sketch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from . import countsketch, perfect, transforms, tv_sampler, worp
+from .perfect import Sample
+
+_EMPTY = jnp.int32(-1)
+
+
+class SamplerConfig(NamedTuple):
+    """Static sampler parameters, shared across the registry.
+
+    Individual samplers read the fields they need: sketch samplers use
+    rows/width/candidates, the two-pass buffer uses ``capacity``, the perfect
+    oracle uses ``domain`` (explicit frequency-vector size), and the TV
+    cascade uses ``num_samplers``.  Hashable, so (name, cfg) keys caches.
+    """
+
+    rows: int = 7
+    width: int = 2048
+    candidates: int = 512
+    capacity: int = 512
+    p: float = 1.0
+    scheme: str = transforms.PPSWOR
+    domain: int = 4096        # "perfect": explicit frequency-vector length
+    num_samplers: int = 8     # "tv": r single-draw samplers in the cascade
+
+
+class SamplerSpec(NamedTuple):
+    """Frozen (init, update, merge, sample, estimate) bundle over one state
+    pytree shape.  ``init2..sample2`` are None for single-phase samplers."""
+
+    name: str
+    cfg: SamplerConfig
+    init: Callable[[Any, Any], Any]
+    update: Callable[[Any, jnp.ndarray, jnp.ndarray], Any]
+    merge: Callable[[Any, Any], Any]
+    sample: Callable[[Any, int], Sample]
+    estimate: Callable[[Any, jnp.ndarray], jnp.ndarray]
+    init2: Optional[Callable[[Any], Any]] = None
+    update2: Optional[Callable[[Any, Any, jnp.ndarray, jnp.ndarray], Any]] = None
+    merge2: Optional[Callable[[Any, Any], Any]] = None
+    sample2: Optional[Callable[[Any, int], Sample]] = None
+
+    @property
+    def two_phase(self) -> bool:
+        """True when the spec offers an exact frozen-priority second pass."""
+        return self.init2 is not None
+
+
+_REGISTRY: Dict[str, Callable[[SamplerConfig], SamplerSpec]] = {}
+
+
+def register(name: str):
+    """Decorator: register a ``SamplerConfig -> SamplerSpec`` factory."""
+
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def available() -> tuple:
+    """Registered sampler names, sorted (stable for CLI choices / tests)."""
+    return tuple(sorted(_REGISTRY))
+
+
+@functools.lru_cache(maxsize=None)
+def make_sampler(name: str, cfg: SamplerConfig = SamplerConfig()) -> SamplerSpec:
+    """Build (and cache) the spec for ``name`` under ``cfg``.
+
+    The cache makes spec identity a function of (name, cfg), which lets
+    downstream layers key jit/vmap caches off the spec object itself.
+    """
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown sampler {name!r}; registered: {', '.join(available())}"
+        ) from None
+    return factory(cfg)
+
+
+# ---------------------------------------------------------------------------
+# one-pass WORp
+# ---------------------------------------------------------------------------
+
+@register("onepass")
+def _make_onepass(cfg: SamplerConfig) -> SamplerSpec:
+    def init(seed_sketch, seed_transform):
+        return worp.onepass_init(cfg.rows, cfg.width, cfg.candidates,
+                                 seed_sketch, seed_transform)
+
+    def update(st, keys, values):
+        return worp.onepass_update(st, keys, values, cfg.p, cfg.scheme)
+
+    def sample(st, k):
+        return worp.onepass_sample(st, k, cfg.p, cfg.scheme)
+
+    def estimate(st, keys):
+        return countsketch.estimate(st.sketch, keys)
+
+    def init2(st):
+        return worp.twopass_init(cfg.capacity, st.seed_transform)
+
+    def update2(st2, st, keys, values):
+        return worp.twopass_update(st2, st.sketch, keys, values)
+
+    def sample2(st2, k):
+        return worp.twopass_sample(st2, k, cfg.p, cfg.scheme)
+
+    return SamplerSpec(
+        name="onepass", cfg=cfg, init=init, update=update,
+        merge=worp.onepass_merge, sample=sample, estimate=estimate,
+        init2=init2, update2=update2, merge2=worp.twopass_merge,
+        sample2=sample2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# two-pass WORp as a streaming spec
+# ---------------------------------------------------------------------------
+
+class TwoPassRunState(NamedTuple):
+    """Pass-I sketch and pass-II exact-frequency buffer carried together so
+    two-pass WORp fits the single-phase protocol (see module docstring for
+    the online-priority caveat)."""
+
+    pass1: worp.OnePassState
+    pass2: worp.TwoPassState
+
+
+@register("twopass")
+def _make_twopass(cfg: SamplerConfig) -> SamplerSpec:
+    def init(seed_sketch, seed_transform):
+        return TwoPassRunState(
+            pass1=worp.onepass_init(cfg.rows, cfg.width, cfg.candidates,
+                                    seed_sketch, seed_transform),
+            pass2=worp.twopass_init(cfg.capacity, seed_transform),
+        )
+
+    def update(st, keys, values):
+        p1 = worp.onepass_update(st.pass1, keys, values, cfg.p, cfg.scheme)
+        # Online priorities: the buffer is keyed by the sketch SO FAR.  Exact
+        # accumulated frequencies, approximate retention vs Algorithm 2's
+        # frozen priorities (use the pass-II hooks for the exact replay).
+        p2 = worp.twopass_update(st.pass2, p1.sketch, keys, values)
+        return TwoPassRunState(pass1=p1, pass2=p2)
+
+    def merge(a, b):
+        return TwoPassRunState(
+            pass1=worp.onepass_merge(a.pass1, b.pass1),
+            pass2=worp.twopass_merge(a.pass2, b.pass2),
+        )
+
+    def sample(st, k):
+        return worp.twopass_sample(st.pass2, k, cfg.p, cfg.scheme)
+
+    def estimate(st, keys):
+        return countsketch.estimate(st.pass1.sketch, keys)
+
+    def init2(st):
+        return worp.twopass_init(cfg.capacity, st.pass1.seed_transform)
+
+    def update2(st2, st, keys, values):
+        return worp.twopass_update(st2, st.pass1.sketch, keys, values)
+
+    def sample2(st2, k):
+        return worp.twopass_sample(st2, k, cfg.p, cfg.scheme)
+
+    return SamplerSpec(
+        name="twopass", cfg=cfg, init=init, update=update, merge=merge,
+        sample=sample, estimate=estimate, init2=init2, update2=update2,
+        merge2=worp.twopass_merge, sample2=sample2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# perfect (oracle) sampler over an explicit frequency vector
+# ---------------------------------------------------------------------------
+
+class PerfectState(NamedTuple):
+    """Explicit (domain,) frequency vector -- what the sketches avoid, kept
+    in the registry as protocol-shaped ground truth."""
+
+    freqs: jnp.ndarray          # (domain,) float32 exact frequencies
+    seed_transform: jnp.ndarray  # uint32 scalar
+
+
+@register("perfect")
+def _make_perfect(cfg: SamplerConfig) -> SamplerSpec:
+    def init(seed_sketch, seed_transform):
+        del seed_sketch  # no sketch randomness: the oracle is exact
+        return PerfectState(
+            freqs=jnp.zeros((cfg.domain,), jnp.float32),
+            seed_transform=jnp.asarray(seed_transform, jnp.uint32),
+        )
+
+    def update(st, keys, values):
+        keys = jnp.asarray(keys, jnp.int32)
+        values = jnp.asarray(values, jnp.float32)
+        ok = (keys >= 0) & (keys < cfg.domain)
+        safe = jnp.clip(keys, 0, cfg.domain - 1)
+        return PerfectState(
+            freqs=st.freqs.at[safe].add(jnp.where(ok, values, 0.0)),
+            seed_transform=st.seed_transform,
+        )
+
+    def merge(a, b):
+        return PerfectState(freqs=a.freqs + b.freqs,
+                            seed_transform=a.seed_transform)
+
+    def sample(st, k):
+        if k + 1 > cfg.domain:
+            raise ValueError(
+                f"perfect sample: k={k} needs k < domain={cfg.domain} "
+                f"(the (k+1)-st transformed frequency is the threshold)")
+        return perfect.ppswor_sample(st.freqs, k, cfg.p, st.seed_transform,
+                                     cfg.scheme)
+
+    def estimate(st, keys):
+        keys = jnp.asarray(keys, jnp.int32)
+        ok = (keys >= 0) & (keys < cfg.domain)
+        safe = jnp.clip(keys, 0, cfg.domain - 1)
+        t = transforms.transform_frequencies(safe, st.freqs[safe], cfg.p,
+                                             st.seed_transform, cfg.scheme)
+        return jnp.where(ok, t, 0.0)
+
+    return SamplerSpec(name="perfect", cfg=cfg, init=init, update=update,
+                       merge=merge, sample=sample, estimate=estimate)
+
+
+# ---------------------------------------------------------------------------
+# TV (Algorithm 1) cascade
+# ---------------------------------------------------------------------------
+
+@register("tv")
+def _make_tv(cfg: SamplerConfig) -> SamplerSpec:
+    def init(seed_sketch, seed_transform):
+        # The cascade derives its whole seed bundle from one uint32; fold
+        # both protocol seeds in so shards built from equal seed pairs merge.
+        seed = (jnp.asarray(seed_sketch, jnp.uint32)
+                ^ (jnp.asarray(seed_transform, jnp.uint32)
+                   * jnp.uint32(0x9E3779B9)))
+        return tv_sampler.init(
+            cfg.num_samplers, cfg.rows, cfg.width, cfg.candidates,
+            rhh_rows=cfg.rows, rhh_width=cfg.width,
+            rhh_candidates=cfg.candidates, seed=seed)
+
+    def update(st, keys, values):
+        return tv_sampler.update(st, keys, values, cfg.p, cfg.scheme)
+
+    def sample(st, k):
+        keys = tv_sampler.produce_sample(st, k, cfg.p, cfg.scheme)
+        live = keys != _EMPTY
+        safe = jnp.where(live, keys, 0)
+        est_t = countsketch.estimate(st.rhh.sketch, safe)
+        freqs = transforms.invert_frequency(safe, est_t, cfg.p,
+                                            st.rhh.seed_transform, cfg.scheme)
+        # No bottom-k threshold exists for the cascade: NaN, not a number
+        # that HT estimators would silently trust.
+        return Sample(keys=keys,
+                      freqs=jnp.where(live, freqs, 0.0),
+                      threshold=jnp.float32(jnp.nan),
+                      transformed=jnp.where(live, est_t, 0.0))
+
+    def estimate(st, keys):
+        return countsketch.estimate(st.rhh.sketch, keys)
+
+    return SamplerSpec(name="tv", cfg=cfg, init=init, update=update,
+                       merge=tv_sampler.merge, sample=sample,
+                       estimate=estimate)

@@ -54,8 +54,8 @@ def init(num_samplers: int, rows: int, width: int, candidates: int,
     )
 
 
-def _update_one(sk, ck, tseed, keys, values, p):
-    tvals = transforms.transform_values(keys, values, p, tseed)
+def _update_one(sk, ck, tseed, keys, values, p, scheme):
+    tvals = transforms.transform_values(keys, values, p, tseed, scheme)
     sk2 = countsketch.update(sk, keys, tvals)
     all_keys = jnp.concatenate([ck, keys])
     est = jnp.abs(countsketch.estimate(sk2, all_keys))
@@ -66,14 +66,16 @@ def _update_one(sk, ck, tseed, keys, values, p):
 
 
 def update(st: TVSamplerState, keys: jnp.ndarray, values: jnp.ndarray,
-           p: float) -> TVSamplerState:
+           p: float, scheme: str = transforms.PPSWOR) -> TVSamplerState:
     keys = jnp.asarray(keys, jnp.int32)
     values = jnp.asarray(values, jnp.float32)
-    sk2, ck2 = jax.vmap(_update_one, in_axes=(0, 0, 0, None, None, None))(
-        st.sketches, st.cand_keys, st.transform_seeds, keys, values, p)
+    sk2, ck2 = jax.vmap(
+        lambda sk, ck, ts, k, v: _update_one(sk, ck, ts, k, v, p, scheme),
+        in_axes=(0, 0, 0, None, None))(
+        st.sketches, st.cand_keys, st.transform_seeds, keys, values)
     return TVSamplerState(
         sketches=sk2, cand_keys=ck2, transform_seeds=st.transform_seeds,
-        rhh=worp.onepass_update(st.rhh, keys, values, p))
+        rhh=worp.onepass_update(st.rhh, keys, values, p, scheme))
 
 
 def merge(a: TVSamplerState, b: TVSamplerState) -> TVSamplerState:
@@ -93,7 +95,8 @@ def merge(a: TVSamplerState, b: TVSamplerState) -> TVSamplerState:
                           rhh=worp.onepass_merge(a.rhh, b.rhh))
 
 
-def produce_sample(st: TVSamplerState, k: int, p: float) -> jnp.ndarray:
+def produce_sample(st: TVSamplerState, k: int, p: float,
+                   scheme: str = transforms.PPSWOR) -> jnp.ndarray:
     """Algorithm 1's extraction loop.  Returns (k,) keys (-1 where FAIL)."""
     r = st.transform_seeds.shape[0]
     selected = jnp.full((k,), _EMPTY, jnp.int32)
@@ -119,13 +122,13 @@ def produce_sample(st: TVSamplerState, k: int, p: float) -> jnp.ndarray:
         est_freq = transforms.invert_frequency(
             out_i[None],
             countsketch.estimate(st.rhh.sketch, out_i[None]),
-            p, st.rhh.seed_transform)[0]
+            p, st.rhh.seed_transform, scheme)[0]
         upd_val = jnp.where(fresh, -est_freq, 0.0)
 
         def sub(sk_j, ck_j, tseed_j, j):
             do = j > i
             tval = transforms.transform_values(
-                out_i[None], upd_val[None], p, tseed_j)
+                out_i[None], upd_val[None], p, tseed_j, scheme)
             sk_new = countsketch.update(sk_j, out_i[None], tval)
             table = jnp.where(do, sk_new.table, sk_j.table)
             return countsketch.CountSketch(table=table, seed=sk_j.seed), ck_j

@@ -102,12 +102,23 @@ def onepass_merge(a: OnePassState, b: OnePassState) -> OnePassState:
     return OnePassState(sketch=sk, cand_keys=ck, seed_transform=a.seed_transform)
 
 
-def onepass_sample(
-    st: OnePassState, k: int, p: float, scheme: str = transforms.PPSWOR
+def _check_sample_k(k: int, slots: int, fn: str, knob: str) -> None:
+    """top_k(-, k+1) needs the (k+1)-st entry as the threshold; fail with a
+    descriptive error instead of an opaque top_k shape error."""
+    if k + 1 > slots:
+        raise ValueError(
+            f"{fn}: k={k} needs k < {knob}={slots} (the (k+1)-st stored "
+            f"estimate is the sample threshold); raise {knob} or lower k")
+
+
+def onepass_sample_from_estimates(
+    st: OnePassState, est: jnp.ndarray, k: int, p: float,
+    scheme: str = transforms.PPSWOR,
 ) -> Sample:
-    """Top-k candidates by estimated |nu*|; threshold = (k+1)-st estimate;
-    approximate frequencies nu' via Eq. (6)."""
-    est = countsketch.estimate(st.sketch, st.cand_keys)
+    """``onepass_sample`` with the candidate estimates precomputed -- the
+    seam that lets the batched engine obtain ``est`` for all B streams from
+    one Pallas query kernel dispatch."""
+    _check_sample_k(k, st.cand_keys.shape[-1], "onepass_sample", "candidates")
     mag = jnp.where(st.cand_keys == _EMPTY, _NEG, jnp.abs(est))
     top_mag, top_i = jax.lax.top_k(mag, k + 1)
     sel = st.cand_keys[top_i[:k]]
@@ -120,6 +131,15 @@ def onepass_sample(
         threshold=top_mag[k],
         transformed=est_sel,
     )
+
+
+def onepass_sample(
+    st: OnePassState, k: int, p: float, scheme: str = transforms.PPSWOR
+) -> Sample:
+    """Top-k candidates by estimated |nu*|; threshold = (k+1)-st estimate;
+    approximate frequencies nu' via Eq. (6)."""
+    est = countsketch.estimate(st.sketch, st.cand_keys)
+    return onepass_sample_from_estimates(st, est, k, p, scheme)
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +199,7 @@ def twopass_sample(
     st: TwoPassState, k: int, p: float, scheme: str = transforms.PPSWOR
 ) -> Sample:
     """Final sample: top-k stored keys by EXACT |nu*|, exact frequencies."""
+    _check_sample_k(k, st.keys.shape[-1], "twopass_sample", "capacity")
     safe_keys = jnp.where(st.keys == _EMPTY, 0, st.keys)
     tstar = transforms.transform_frequencies(
         safe_keys, st.freqs, p, st.seed_transform, scheme
@@ -199,6 +220,8 @@ def twopass_extended_sample(st: TwoPassState, k: int, p: float,
     """Practical optimization Sec 4.1 (second): certify a larger effective
     sample.  Any key with nu* >= L + nu*_{(k+1)}/3 (L = min estimate retained)
     must be stored; returns a boolean mask over stored slots plus threshold."""
+    _check_sample_k(k, st.keys.shape[-1], "twopass_extended_sample",
+                    "capacity")
     safe_keys = jnp.where(st.keys == _EMPTY, 0, st.keys)
     tstar = transforms.transform_frequencies(
         safe_keys, st.freqs, p, st.seed_transform, scheme)
@@ -207,7 +230,12 @@ def twopass_extended_sample(st: TwoPassState, k: int, p: float,
     err = top_mag[k] / 3.0
     live_prio = jnp.where(st.keys == _EMPTY, jnp.inf, st.priority)
     L = jnp.min(live_prio)
-    certified = mag >= (L + err)
+    # Fewer than k+1 stored keys leaves the certification bar ill-defined:
+    # err = -inf (and on an all-empty buffer L = inf, so L + err = NaN).
+    # A non-finite bar certifies nothing rather than everything/NaN.
+    bar = L + err
+    bar = jnp.where(jnp.isfinite(bar), bar, jnp.inf)
+    certified = (st.keys != _EMPTY) & (mag >= bar)
     # Threshold = min certified nu* (tau for estimation over the larger sample).
     tau = jnp.min(jnp.where(certified, mag, jnp.inf))
     return certified, tau

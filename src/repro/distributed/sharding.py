@@ -148,8 +148,12 @@ def named_sharding(shape, axes, mesh=None, rules=None) -> NamedSharding:
 # ---------------------------------------------------------------------------
 # sketch merge trees (SketchEngine distributed reduction layer)
 # ---------------------------------------------------------------------------
-# WORp states are composable: merge(a, b) is the state of the union of the
-# two shards' data.  These helpers give the reduction O(log D) depth:
+# Sampler states are composable: merge(a, b) is the state of the union of
+# the two shards' data.  Every helper below accepts either a bare merge
+# callable or anything exposing a ``.merge`` attribute -- in particular a
+# ``repro.core.sampler.SamplerSpec`` (or the engine's BatchedSamplerOps) --
+# so the distributed reduction layer works for ANY registered sampler
+# without naming one.  These helpers give the reduction O(log D) depth:
 #
 #   tree_merge          -- host-side pairwise tree over a list of states
 #   butterfly_allmerge  -- in-shard_map hypercube exchange: round r swaps
@@ -163,8 +167,22 @@ def named_sharding(shape, axes, mesh=None, rules=None) -> NamedSharding:
 #                          tree inside XLA)
 
 
+def _resolve_merge(merge_fn):
+    """A merge callable, from either a function or a SamplerSpec-like
+    object carrying one as ``.merge``."""
+    if callable(merge_fn):
+        return merge_fn
+    merge = getattr(merge_fn, "merge", None)
+    if callable(merge):
+        return merge
+    raise TypeError(
+        f"expected a merge callable or a SamplerSpec with .merge, got "
+        f"{type(merge_fn).__name__}")
+
+
 def tree_merge(states: Sequence, merge_fn):
     """Reduce a list of composable states pairwise: ceil(log2 D) rounds."""
+    merge_fn = _resolve_merge(merge_fn)
     states = list(states)
     if not states:
         raise ValueError("tree_merge of no states")
@@ -183,6 +201,7 @@ def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None):
     Requires a power-of-two axis; falls back to an all_gather + host-side
     tree for ragged device counts (correct, one extra gather of state size).
     """
+    merge_fn = _resolve_merge(merge_fn)
     if axis_size is None:
         mesh = _CTX.mesh
         assert mesh is not None, "butterfly_allmerge needs axis_size or mesh"

@@ -1,21 +1,28 @@
-"""SketchEngine: B independent WORp streams as one batched pytree.
+"""SketchEngine: B sampler streams as one batched pytree.
 
-The engine layer turns the single-stream primitives in ``repro.core.worp``
-into a production data plane: vmapped update/estimate/sample over a leading
-stream axis, a batched Pallas fast path (one ``pallas_call`` for all B
-streams), and log-depth merge trees (host-side and in-shard_map) for
-collapsing shards into global state.
+The engine layer turns the single-stream sampler specs in
+``repro.core.sampler`` into a production data plane: vmapped
+update/estimate/sample over a leading stream axis for ANY registered
+sampler, batched Pallas fast paths for one-pass WORp (one ``pallas_call``
+for all B streams on both the update and the query plane), and log-depth
+merge trees (host-side and in-shard_map) for collapsing shards into global
+state.
 """
 from .engine import (  # noqa: F401
+    BatchedSamplerOps,
     EngineConfig,
     SketchEngine,
+    batched_ops,
     derive_stream_seeds,
+    engine_spec,
+    init_batched,
     onepass_init_batched,
     onepass_merge_batched,
     onepass_sample_batched,
     onepass_update_batched,
     onepass_update_dense,
     reduce_streams,
+    sampler_config,
     twopass_init_batched,
     twopass_merge_batched,
     twopass_sample_batched,

@@ -1,11 +1,15 @@
-"""Batched multi-stream WORp engine (the paper's composability, scaled out).
+"""Batched multi-stream sampler engine (the paper's composability, scaled out).
 
-A *batched state* is the single-stream state pytree from ``repro.core.worp``
-with a leading stream axis on every leaf: ``OnePassState.sketch.table`` is
-(B, rows, width), ``seed_transform`` is (B,), and so on.  Because states are
-plain pytrees, ``jax.vmap`` of the single-stream functions IS the batched
-engine -- the single-stream code in ``worp.py`` stays the canonical per-stream
-definition and the engine never re-implements sketch math.
+A *batched state* is the single-stream state pytree of ANY registered
+``repro.core.sampler`` spec with a leading stream axis on every leaf: for
+one-pass WORp, ``OnePassState.sketch.table`` is (B, rows, width),
+``seed_transform`` is (B,), and so on.  Because specs expose uniform pure
+functions over plain pytrees, ``jax.vmap`` of the spec IS the batched
+engine -- the single-stream code in ``repro.core`` stays the canonical
+per-stream definition and the engine never re-implements sampler math.
+``SketchEngine(cfg, sampler="onepass"|"twopass"|"perfect"|"tv")`` picks the
+sampler from the registry; adding a new sampler is a one-file registry
+entry, not an engine change.
 
 Two seeding regimes:
   * independent (default): every stream hashes its own sketch/transform seeds
@@ -15,10 +19,13 @@ Two seeding regimes:
     logical stream, and ``reduce_streams`` collapses them to the union state
     in O(log B) vmapped merge rounds (the paper's merge, as a tree).
 
-Data plane: ``onepass_update_dense`` routes dense per-stream segments through
-the batched Pallas kernel (``kernels.countsketch_update_batched``) so all B
-streams share one ``pallas_call``; the sketch is linear, so the kernel's
-(B, rows, width) delta just adds onto the batched tables.
+Data plane (one-pass WORp): ``onepass_update_dense`` routes dense per-stream
+segments through the batched Pallas update kernel
+(``kernels.countsketch_update_batched``) so all B streams share one
+``pallas_call``; and the query plane -- batched ``sample``, ``estimate``, and
+the dense-update candidate refresh -- goes through
+``kernels.ops.estimate_batched``, which dispatches ONE batched Pallas query
+kernel on TPU and the bit-identical jnp oracle elsewhere.
 """
 from __future__ import annotations
 
@@ -29,7 +36,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import countsketch, hashing, transforms, worp
+from repro.core import sampler as core_sampler
 from repro.core.perfect import Sample
+from repro.core.sampler import SamplerSpec
 from repro.kernels import ops
 
 _EMPTY = jnp.int32(-1)
@@ -45,6 +54,22 @@ class EngineConfig(NamedTuple):
     scheme: str = transforms.PPSWOR
     seed: int = 0x5EED
     shared_seeds: bool = False  # True => streams are mergeable shards
+    sampler: str = "onepass"    # registry key (see repro.core.sampler)
+    domain: int = 4096          # "perfect" sampler: frequency-vector size
+    num_samplers: int = 8       # "tv" sampler: cascade length r
+
+
+def sampler_config(cfg: EngineConfig) -> core_sampler.SamplerConfig:
+    """Project the engine config onto the registry's SamplerConfig."""
+    return core_sampler.SamplerConfig(
+        rows=cfg.rows, width=cfg.width, candidates=cfg.candidates,
+        capacity=cfg.capacity, p=cfg.p, scheme=cfg.scheme, domain=cfg.domain,
+        num_samplers=cfg.num_samplers)
+
+
+def engine_spec(cfg: EngineConfig) -> SamplerSpec:
+    """The (cached) SamplerSpec this engine config selects."""
+    return core_sampler.make_sampler(cfg.sampler, sampler_config(cfg))
 
 
 def derive_stream_seeds(cfg: EngineConfig):
@@ -59,7 +84,50 @@ def derive_stream_seeds(cfg: EngineConfig):
 
 
 # ---------------------------------------------------------------------------
-# batched one-pass WORp
+# generic batched sampler ops: vmap + jit of any registered spec
+# ---------------------------------------------------------------------------
+
+class BatchedSamplerOps:
+    """Jitted, vmapped forms of one SamplerSpec's functions.
+
+    ``init(sk_seeds, t_seeds)`` maps (B,) seed vectors to the batched state;
+    every other op maps batched states / (B, n) element batches exactly like
+    a Python loop of the single-stream spec functions (the engine's
+    vmap-consistency contract).  Two-phase hooks are present iff the spec
+    has an exact second pass.
+    """
+
+    def __init__(self, spec: SamplerSpec):
+        self.spec = spec
+        self.init = jax.jit(jax.vmap(spec.init))
+        self.update = jax.jit(jax.vmap(spec.update))
+        self.merge = jax.jit(jax.vmap(spec.merge))
+        self.sample = jax.jit(
+            lambda st, k: jax.vmap(lambda s: spec.sample(s, k))(st),
+            static_argnames=("k",))
+        self.estimate = jax.jit(jax.vmap(spec.estimate))
+        if spec.two_phase:
+            self.init2 = jax.jit(jax.vmap(spec.init2))
+            self.update2 = jax.jit(jax.vmap(spec.update2))
+            self.merge2 = jax.jit(jax.vmap(spec.merge2))
+            self.sample2 = jax.jit(
+                lambda st2, k: jax.vmap(lambda s: spec.sample2(s, k))(st2),
+                static_argnames=("k",))
+
+
+@functools.lru_cache(maxsize=None)
+def batched_ops(spec: SamplerSpec) -> BatchedSamplerOps:
+    """Batched ops for a spec; cached so jit caches persist per spec."""
+    return BatchedSamplerOps(spec)
+
+
+def init_batched(cfg: EngineConfig):
+    """Batched initial state for cfg's registered sampler."""
+    return batched_ops(engine_spec(cfg)).init(*derive_stream_seeds(cfg))
+
+
+# ---------------------------------------------------------------------------
+# batched one-pass WORp (legacy names; the engine data plane's fast paths)
 # ---------------------------------------------------------------------------
 
 def onepass_init_batched(cfg: EngineConfig) -> worp.OnePassState:
@@ -90,24 +158,40 @@ def onepass_merge_batched(a: worp.OnePassState, b: worp.OnePassState):
     return jax.vmap(worp.onepass_merge)(a, b)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "p", "scheme"))
+@functools.partial(jax.jit, static_argnames=("k", "p", "scheme", "use_kernel",
+                                             "interpret"))
 def onepass_sample_batched(st: worp.OnePassState, k: int, p: float,
-                           scheme: str = transforms.PPSWOR) -> Sample:
-    """Per-stream WOR samples; every Sample leaf grows a leading (B,) axis."""
-    return jax.vmap(lambda s: worp.onepass_sample(s, k, p, scheme))(st)
+                           scheme: str = transforms.PPSWOR,
+                           use_kernel: Optional[bool] = None,
+                           interpret: Optional[bool] = None) -> Sample:
+    """Per-stream WOR samples; every Sample leaf grows a leading (B,) axis.
+
+    The B-stream candidate estimates come from ONE batched query dispatch
+    (``ops.estimate_batched``: Pallas kernel on TPU, bit-identical jnp
+    oracle elsewhere); the per-stream top-k/invert is the vmapped
+    single-stream tail (``worp.onepass_sample_from_estimates``).
+    """
+    est = ops.estimate_batched(st.sketch.table, st.cand_keys, st.sketch.seed,
+                               use_kernel=use_kernel, interpret=interpret)
+    return jax.vmap(
+        lambda s, e: worp.onepass_sample_from_estimates(s, e, k, p, scheme)
+    )(st, est)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret"))
+@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
+                                             "use_kernel"))
 def onepass_update_dense(st: worp.OnePassState, values: jnp.ndarray,
                          p: float, base_keys=None, lengths=None,
                          scheme: str = transforms.PPSWOR,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         use_kernel: Optional[bool] = None):
     """Fast path: B dense segments through ONE batched pallas_call.
 
     ``values[b, i]`` is the frequency increment of key ``base_keys[b] + i``
     for stream b (columns past ``lengths[b]`` ignored).  Only the PPSWOR
-    scheme is fused into the kernel; the candidate refresh stays on the
-    vmapped jnp path (it is O(C + n) estimates, not the data plane).
+    scheme is fused into the kernel.  The candidate refresh queries the
+    (C + n) per-stream keys through the batched estimate chokepoint --
+    one more batched dispatch instead of B vmapped gathers.
     """
     if scheme != transforms.PPSWOR:
         raise ValueError("kernel fast path fuses the PPSWOR transform only")
@@ -127,26 +211,27 @@ def onepass_update_dense(st: worp.OnePassState, values: jnp.ndarray,
     sk = countsketch.CountSketch(table=st.sketch.table + delta,
                                  seed=st.sketch.seed)
 
-    # candidate refresh (vmapped, same policy as worp.onepass_update)
+    # candidate refresh (same policy as worp.onepass_update): estimates of
+    # (old candidates U batch keys), all B streams in one batched query.
     offs = jnp.arange(n, dtype=jnp.int32)
-
-    def refresh(sk_b, cand_b, base_b, len_b):
-        keys_b = jnp.where(offs < len_b,
-                           base_b.astype(jnp.int32) + offs, _EMPTY)
-        all_keys = jnp.concatenate([cand_b, keys_b])
-        est = jnp.abs(countsketch.estimate(sk_b, all_keys))
-        est = jnp.where(all_keys == _EMPTY, -jnp.inf, est)
-        ck, _, _ = worp._dedup_topc(all_keys, jnp.zeros_like(est), est,
-                                    cand_b.shape[0])
-        return ck
-
-    cand = jax.vmap(refresh)(sk, st.cand_keys, base_keys, lengths)
+    keys_dense = jnp.where(offs[None, :] < lengths[:, None],
+                           base_keys[:, None].astype(jnp.int32) + offs[None, :],
+                           _EMPTY)
+    all_keys = jnp.concatenate([st.cand_keys, keys_dense], axis=1)  # (B, C+n)
+    est = jnp.abs(ops.estimate_batched(sk.table, all_keys, sk.seed,
+                                       use_kernel=use_kernel,
+                                       interpret=interpret))
+    est = jnp.where(all_keys == _EMPTY, -jnp.inf, est)
+    cand = jax.vmap(
+        lambda ak, e: worp._dedup_topc(ak, jnp.zeros_like(e), e,
+                                       st.cand_keys.shape[1])[0]
+    )(all_keys, est)
     return worp.OnePassState(sketch=sk, cand_keys=cand,
                              seed_transform=st.seed_transform)
 
 
 # ---------------------------------------------------------------------------
-# batched two-pass WORp
+# batched two-pass WORp (legacy names)
 # ---------------------------------------------------------------------------
 
 def twopass_init_batched(cfg: EngineConfig) -> worp.TwoPassState:
@@ -187,9 +272,11 @@ def reduce_streams(st, merge_batched):
     """Collapse a batched state's B streams to ONE state in ceil(log2 B)
     vmapped merge rounds (valid when streams share seeds, i.e. are shards).
 
-    Each round merges the first half with the second half stream-wise, so
-    round r performs B / 2^(r+1) merges as one vmapped call -- the same
-    O(log) shape as the distributed tree in ``repro.distributed.sharding``.
+    ``merge_batched`` is a batched merge fn -- e.g. ``onepass_merge_batched``
+    or ``batched_ops(spec).merge`` for any registered sampler.  Each round
+    merges the first half with the second half stream-wise, so round r
+    performs B / 2^(r+1) merges as one vmapped call -- the same O(log) shape
+    as the distributed tree in ``repro.distributed.sharding``.
     """
     num = jax.tree_util.tree_leaves(st)[0].shape[0]
     while num > 1:
@@ -210,31 +297,45 @@ def reduce_streams(st, merge_batched):
 # ---------------------------------------------------------------------------
 
 class SketchEngine:
-    """Holds a batched one-pass (and optionally two-pass) WORp state.
+    """Holds a batched state for any registered sampler (plus an optional
+    exact pass-II state when the sampler has one).
 
     Thin object shell over the functional batched ops above -- all state is
     jax pytrees, so an engine can live inside jit/scan via its ``.state``.
     """
 
-    def __init__(self, cfg: EngineConfig):
+    def __init__(self, cfg: EngineConfig, sampler: Optional[str] = None):
+        if sampler is not None and sampler != cfg.sampler:
+            cfg = cfg._replace(sampler=sampler)
         self.cfg = cfg
-        self.state = onepass_init_batched(cfg)
-        self.pass2: Optional[worp.TwoPassState] = None
+        self.spec = engine_spec(cfg)
+        self.ops = batched_ops(self.spec)
+        self.state = self.ops.init(*derive_stream_seeds(cfg))
+        self.pass2 = None
 
     @property
     def num_streams(self) -> int:
         return self.cfg.num_streams
 
+    @property
+    def sampler(self) -> str:
+        return self.cfg.sampler
+
     # -- pass I -------------------------------------------------------------
     def update(self, keys, values):
         """Sparse element batches: keys/values (B, n) int32/float32."""
-        self.state = onepass_update_batched(self.state, keys, values,
-                                            self.cfg.p, self.cfg.scheme)
+        self.state = self.ops.update(self.state, keys, values)
         return self
 
     def update_dense(self, values, base_keys=None, lengths=None,
                      interpret=None):
-        """Dense segments through the batched Pallas kernel (one call)."""
+        """Dense segments through the batched Pallas kernel (one call).
+
+        One-pass WORp only: the other samplers have no fused dense kernel."""
+        if self.cfg.sampler != "onepass":
+            raise ValueError(
+                f"update_dense: sampler {self.cfg.sampler!r} has no Pallas "
+                f"dense fast path (only 'onepass'); use update()")
         self.state = onepass_update_dense(self.state, values, self.cfg.p,
                                           base_keys=base_keys,
                                           lengths=lengths,
@@ -242,39 +343,67 @@ class SketchEngine:
         return self
 
     def merge_with(self, other: "SketchEngine"):
-        """Stream-wise union with another engine (same cfg + seeds)."""
-        self.state = onepass_merge_batched(self.state, other.state)
+        """Stream-wise union with another engine.
+
+        Stream b of ``self`` merges with stream b of ``other``; that is only
+        the union of the two engines' data when both derive IDENTICAL
+        per-stream seeds and state shapes, i.e. when the configs are equal
+        (under either seeding regime -- ``shared_seeds`` additionally makes
+        the B streams shards of one logical stream, which is what
+        ``collapse()`` requires)."""
+        ocfg = getattr(other, "cfg", None)
+        if not isinstance(other, SketchEngine) or ocfg is None:
+            raise TypeError(
+                f"merge_with expects a SketchEngine, got {type(other).__name__}")
+        if ocfg != self.cfg:
+            diff = [f"{f}={getattr(self.cfg, f)!r} vs {getattr(ocfg, f)!r}"
+                    for f in self.cfg._fields
+                    if getattr(self.cfg, f) != getattr(ocfg, f)]
+            raise ValueError(
+                "merge_with: engines are not mergeable -- stream-wise union "
+                "requires identical EngineConfig (per-stream hash seeds and "
+                "state shapes must agree, or the merged sketch is garbage); "
+                "mismatched fields: " + ", ".join(diff))
+        self.state = self.ops.merge(self.state, other.state)
         return self
 
     def sample(self, k: int) -> Sample:
-        return onepass_sample_batched(self.state, k, self.cfg.p,
-                                      self.cfg.scheme)
+        if self.cfg.sampler == "onepass":
+            # batched query-kernel path (one dispatch for all B streams)
+            return onepass_sample_batched(self.state, k, self.cfg.p,
+                                          self.cfg.scheme)
+        return self.ops.sample(self.state, k=k)
 
     def estimate(self, keys) -> jnp.ndarray:
         """Per-stream transformed-domain estimates for (B, n) keys."""
-        return jax.vmap(countsketch.estimate)(self.state.sketch, keys)
+        if self.cfg.sampler == "onepass":
+            return ops.estimate_batched(self.state.sketch.table, keys,
+                                        self.state.sketch.seed)
+        return self.ops.estimate(self.state, keys)
 
-    # -- pass II ------------------------------------------------------------
+    # -- exact pass II (samplers with a frozen-priority second pass) --------
     def freeze(self):
-        """Freeze pass-I priorities and start batched pass II."""
-        self.pass2 = twopass_init_batched(self.cfg)
+        """Freeze pass-I priorities and start the exact second pass."""
+        if not self.spec.two_phase:
+            raise ValueError(
+                f"freeze: sampler {self.cfg.sampler!r} has no exact second "
+                f"pass (two-phase samplers: onepass, twopass)")
+        self.pass2 = self.ops.init2(self.state)
         return self
 
     def update_pass2(self, keys, values):
         assert self.pass2 is not None, "call freeze() before pass II"
-        self.pass2 = twopass_update_batched(self.pass2, self.state.sketch,
-                                            keys, values)
+        self.pass2 = self.ops.update2(self.pass2, self.state, keys, values)
         return self
 
     def sample_exact(self, k: int) -> Sample:
         assert self.pass2 is not None, "call freeze() before pass II"
-        return twopass_sample_batched(self.pass2, k, self.cfg.p,
-                                      self.cfg.scheme)
+        return self.ops.sample2(self.pass2, k=k)
 
     # -- shard collapse -----------------------------------------------------
-    def collapse(self) -> worp.OnePassState:
+    def collapse(self):
         """Merge all B streams into one state (requires shared_seeds)."""
         if not self.cfg.shared_seeds:
             raise ValueError("collapse() requires shared_seeds=True "
                              "(independent streams are not mergeable)")
-        return reduce_streams(self.state, onepass_merge_batched)
+        return reduce_streams(self.state, self.ops.merge)

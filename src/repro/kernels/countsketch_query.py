@@ -8,6 +8,13 @@ GPU.  TPU adaptation: the gather becomes a one-hot matmul over width blocks:
 The key batch is sample-sized (k or Bk candidates), so the (K,) accumulator
 tile stays in VMEM across the width sweep; the table streams through once.
 The final median-over-rows is O(R*K) and runs outside the kernel (ops layer).
+
+Batched variant (``countsketch_query_batched``): the grid grows a leading
+batch dimension so the B streams of a ``SketchEngine`` -- each with its own
+table and hash seed -- are estimated by ONE ``pallas_call`` instead of a
+Python loop of B dispatches.  Per-stream seeds ride in a (B, 128) meta table
+and the one-hot gather becomes a batched contraction on the MXU.  This is
+the engine's batched estimate / sample / candidate-refresh query plane.
 """
 from __future__ import annotations
 
@@ -98,3 +105,100 @@ def countsketch_estimate(table, keys, seed, interpret: bool = True):
     """Full R.Est: median over rows (tiny; computed outside the kernel)."""
     return jnp.median(countsketch_query(table, keys, seed,
                                         interpret=interpret), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-stream query (SketchEngine estimate/sample plane)
+# ---------------------------------------------------------------------------
+
+_META_SEED = 0
+_META_COLS = 128
+
+
+def _batched_kernel(meta_ref, keys_ref, table_ref, out_ref, *, rows: int,
+                    width: int, block_w: int, block_k: int):
+    # grid = (batch_blocks, width_blocks): each (stream-block, key-tile)
+    # accumulator revisits across the width sweep; tables stream through once.
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seed = meta_ref[:, _META_SEED:_META_SEED + 1].astype(jnp.uint32)  # (B,1)
+    keys = keys_ref[...].astype(jnp.uint32)                           # (B,K)
+    col0 = j * block_w
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_k, block_w), 1) + col0
+
+    ests = []
+    for r in range(rows):
+        salt = hashing.row_salt(seed, jnp.uint32(r))          # (B, 1)
+        bucket = hashing.bucket_hash(keys, salt, width)       # (B, K)
+        sign = hashing.sign_hash(keys, salt)                  # (B, K)
+        onehot = (bucket[:, :, None] == cols[None]).astype(jnp.float32)
+        trow = table_ref[:, r, :][:, :, None].astype(jnp.float32)  # (B,WB,1)
+        part = jax.lax.dot_general(
+            onehot, trow,  # batched contraction: B streams on the MXU
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )  # (B, K, 1)
+        ests.append(part[:, None, :, 0] * sign[:, None, :])   # (B, 1, K)
+    out_ref[...] += jnp.concatenate(ests, axis=1)             # (B, rows, K)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_w", "block_b", "interpret")
+)
+def countsketch_query_batched(
+    tables: jnp.ndarray,   # (B, rows, width) per-stream tables
+    keys: jnp.ndarray,     # (B, k) per-stream key batches
+    seeds: jnp.ndarray,    # (B,) per-stream hash seeds
+    block_w: int = 1024,
+    block_b: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-row signed bucket reads for B streams in ONE pallas_call.
+
+    Returns (B, rows, k) estimates; stream b is queried against its own
+    table and seed, so independent engine streams batch without sharing
+    randomness.
+    """
+    B, rows, width = tables.shape
+    k = keys.shape[1]
+    k_pad = _pad_to(max(k, 128), 128)
+    block_w = min(block_w, _pad_to(width, 128))
+    w_pad = _pad_to(width, block_w)
+    block_b = min(block_b, _pad_to(B, 8))
+    b_pad = _pad_to(B, block_b)
+
+    keys_p = jnp.pad(jnp.asarray(keys, jnp.int32),
+                     ((0, b_pad - B), (0, k_pad - k)))
+    tables_p = jnp.pad(tables, ((0, b_pad - B), (0, 0), (0, w_pad - width)))
+    seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32), (B,))
+    meta = jnp.zeros((b_pad, _META_COLS), jnp.int32)
+    meta = meta.at[:B, _META_SEED].set(seeds.astype(jnp.int32))
+
+    grid = (b_pad // block_b, w_pad // block_w)
+    out = pl.pallas_call(
+        functools.partial(_batched_kernel, rows=rows, width=width,
+                          block_w=block_w, block_k=k_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, _META_COLS), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, k_pad), lambda b, j: (b, 0)),
+            pl.BlockSpec((block_b, rows, block_w), lambda b, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, rows, k_pad), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, rows, k_pad), jnp.float32),
+        interpret=interpret,
+        name="worp_countsketch_query_batched",
+    )(meta, keys_p, tables_p)
+    return out[:B, :, :k]
+
+
+def countsketch_estimate_batched(tables, keys, seeds, interpret: bool = True,
+                                 **kw):
+    """Batched R.Est: (B, k) median-over-rows from one kernel dispatch."""
+    return jnp.median(countsketch_query_batched(tables, keys, seeds,
+                                                interpret=interpret, **kw),
+                      axis=1)

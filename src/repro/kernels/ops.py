@@ -14,9 +14,12 @@ from .countsketch_update import (
     countsketch_update as _update,
     countsketch_update_batched as _update_batched,
 )
+from . import ref
 from .countsketch_query import (
     countsketch_query as _query,
+    countsketch_query_batched as _query_batched,
     countsketch_estimate as _estimate,
+    countsketch_estimate_batched as _estimate_batched,
 )
 from .ppswor_transform import ppswor_transform as _transform
 
@@ -52,6 +55,33 @@ def query_rows(table, keys, seed, interpret=None, **kw):
     if interpret is None:
         interpret = _default_interpret()
     return _query(table, keys, seed, interpret=interpret, **kw)
+
+
+def query_rows_batched(tables, keys, seeds, interpret=None, **kw):
+    """Per-row reads for B streams in one batched pallas_call: (B, rows, k)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _query_batched(tables, keys, seeds, interpret=interpret, **kw)
+
+
+def estimate_batched(tables, keys, seeds, interpret=None, use_kernel=None,
+                     **kw):
+    """Batched R.Est for B streams: (B, rows, width) tables + (B, k) keys
+    -> (B, k) median-of-rows estimates.
+
+    The single chokepoint for the engine's estimate/sample/candidate-refresh
+    query plane: ``use_kernel=None`` picks the Pallas kernel on TPU (one
+    MXU-packed pallas_call for all B streams) and the pure-jnp oracle
+    elsewhere (interpret-mode Pallas would burn CPU time for identical
+    fp32 results -- both paths read exact signed buckets).
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.countsketch_estimate_batched_ref(tables, keys, seeds)
+    if interpret is None:
+        interpret = _default_interpret()
+    return _estimate_batched(tables, keys, seeds, interpret=interpret, **kw)
 
 
 def estimate(table, keys, seed, interpret=None):

@@ -71,3 +71,16 @@ def countsketch_query_ref(
 def countsketch_estimate_ref(table, keys, seed):
     """Median-of-rows estimate (the full R.Est)."""
     return jnp.median(countsketch_query_ref(table, keys, seed), axis=0)
+
+
+def countsketch_query_batched_ref(tables, keys, seeds):
+    """Oracle for the batched query kernel: (B, rows, k) per-stream reads."""
+    seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32),
+                             (tables.shape[0],))
+    return jax.vmap(countsketch_query_ref)(tables, keys, seeds)
+
+
+def countsketch_estimate_batched_ref(tables, keys, seeds):
+    """Oracle batched R.Est: (B, k) median over rows, per stream."""
+    return jnp.median(countsketch_query_batched_ref(tables, keys, seeds),
+                      axis=1)

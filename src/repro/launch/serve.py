@@ -7,6 +7,9 @@ With ``--worp-topk K`` every request (batch row) additionally feeds its
 decoded token ids into one stream of a batched SketchEngine -- the serving
 tie-in the paper motivates (per-user token-frequency WOR samples, mergeable
 across serving replicas) -- and the per-request top tokens print at the end.
+``--sampler`` picks ANY sampler from the registry (onepass, twopass,
+perfect, tv): the engine is sampler-generic, so serving analytics swap
+samplers without code changes.
 """
 import argparse
 
@@ -15,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCH_NAMES, get_config
+from repro.core import sampler as core_sampler
 from repro.engine import EngineConfig, SketchEngine
 from repro.models import model as M
 from repro.models import transformer as T
@@ -31,6 +35,10 @@ def main():
                     help="track per-request token streams in a batched "
                          "SketchEngine and report the top-K WOR sample")
     ap.add_argument("--worp-p", type=float, default=1.0)
+    ap.add_argument("--sampler", default="onepass",
+                    choices=core_sampler.available(),
+                    help="registered sampler backing the token analytics "
+                         "engine (see repro.core.sampler)")
     args = ap.parse_args()
     if args.worp_topk < 0:
         ap.error("--worp-topk must be >= 0")
@@ -70,7 +78,9 @@ def main():
         # one engine stream per request; prompt tokens seed the streams
         engine = SketchEngine(EngineConfig(
             num_streams=B, rows=5, width=max(256, 31 * args.worp_topk),
-            candidates=4 * args.worp_topk, p=args.worp_p, seed=0x5EED))
+            candidates=4 * args.worp_topk, p=args.worp_p, seed=0x5EED,
+            sampler=args.sampler, domain=cfg.vocab_size,
+            num_samplers=max(4, args.worp_topk)))
         engine.update(batch["tokens"],
                       jnp.ones_like(batch["tokens"], jnp.float32))
         engine.update(tok, jnp.ones_like(tok, jnp.float32))

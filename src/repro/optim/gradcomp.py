@@ -30,10 +30,11 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from repro.core import countsketch, transforms
+from repro.core import countsketch, estimators, transforms, worp
 from repro.kernels import ops as kernel_ops
 
 _NEG = jnp.float32(-jnp.inf)
+_EMPTY = jnp.int32(-1)
 
 
 class CompressorConfig(NamedTuple):
@@ -42,6 +43,7 @@ class CompressorConfig(NamedTuple):
     width: int = 2048         # per-row buckets; paper experiments use k x 31
     candidates: int = 512     # local candidate proposals per worker
     p: float = 1.0            # ell_p sampling power over |gradient|
+    scheme: str = transforms.PPSWOR  # bottom-k scheme (registry schemes)
     mode: str = "twopass"     # 'onepass' | 'twopass'
     estimator: str = "raw"    # 'raw' (EF-SGD) | 'ht' (unbiased, Eq. 1)
     seed: int = 0x5EED
@@ -60,7 +62,7 @@ def compress_locally(a: jnp.ndarray, cc: CompressorConfig):
     n = a.shape[0]
     keys = jnp.arange(n, dtype=jnp.int32)
     ta = transforms.transform_values(keys, a.astype(jnp.float32), cc.p,
-                                     jnp.uint32(cc.seed))
+                                     jnp.uint32(cc.seed), cc.scheme)
     sk = countsketch.init(cc.rows, cc.width, jnp.uint32(cc.seed) + 1)
     sk = countsketch.update(sk, keys, ta)
     _, cand = jax.lax.top_k(jnp.abs(a.astype(jnp.float32)), cc.candidates)
@@ -79,7 +81,7 @@ def decode_sample(table: jnp.ndarray, cand: jnp.ndarray,
     sel = ids[top_i[: cc.k]]
     est_t_sorted = countsketch.estimate(sk, sel)
     vals = transforms.invert_frequency(sel, est_t_sorted, cc.p,
-                                       jnp.uint32(cc.seed))
+                                       jnp.uint32(cc.seed), cc.scheme)
     return sel, vals, top_score[cc.k]
 
 
@@ -103,9 +105,10 @@ def compress_step(a_local: jnp.ndarray, cc: CompressorConfig,
         vals = est_vals / nworkers  # estimates approximate the SUM
 
     if cc.estimator == "ht":
-        # Horvitz-Thompson inverse-probability weights (Eq. 1) -> unbiased.
-        ratio = (jnp.abs(vals) / jnp.maximum(tau, 1e-30)) ** cc.p
-        probs = -jnp.expm1(-ratio)
+        # Horvitz-Thompson inverse-probability weights (Eq. 1) -> unbiased;
+        # scheme-aware via the shared estimator (ppswor and priority differ).
+        probs = estimators.inclusion_probability(
+            vals, jnp.maximum(tau, 1e-30), cc.p, cc.scheme)
         vals = vals / jnp.maximum(probs, 1e-6)
 
     sparse = jnp.zeros((n,), jnp.float32).at[ids].set(vals)
@@ -173,7 +176,7 @@ def tree_compress_step_sharded(grads, error, cc: CompressorConfig,
         accs.append(a)
         salt = _leaf_salt(cc, li)
         keys = jnp.arange(size, dtype=jnp.uint32)
-        ta = transforms.transform_values(keys, a, cc.p, salt)
+        ta = transforms.transform_values(keys, a, cc.p, salt, cc.scheme)
         sk = countsketch.update(
             countsketch.CountSketch(table=table, seed=salt ^ np.uint32(1)),
             keys.astype(jnp.int32), ta)
@@ -199,7 +202,8 @@ def tree_compress_step_sharded(grads, error, cc: CompressorConfig,
         est = jnp.where(cand_tag == li, e_t, est)
         inv = jnp.where(cand_tag == li,
                         transforms.invert_frequency(
-                            cand_id.astype(jnp.uint32), e_t, cc.p, salt),
+                            cand_id.astype(jnp.uint32), e_t, cc.p, salt,
+                            cc.scheme),
                         inv)
 
     # dedup (tag, id) pairs: sort by a fused sort key, mask repeats
@@ -271,6 +275,9 @@ def tree_compress_step_engine(grads, error, cc: CompressorConfig,
     """
     import numpy as np
 
+    if cc.scheme != transforms.PPSWOR:
+        raise ValueError("tree_compress_step_engine: the fused dense kernel "
+                         "supports the ppswor scheme only")
     leaves_g = jax.tree_util.tree_leaves(grads)
     leaves_e = jax.tree_util.tree_leaves(error)
     sizes = [int(np.prod(l.shape)) for l in leaves_g]
@@ -303,31 +310,46 @@ def tree_compress_step_engine(grads, error, cc: CompressorConfig,
     # top_k needs k+1 <= candidate count (D*ncand can be tiny on 1 device)
     k_leaf = min(k_per_leaf, cand.shape[1] - 1)
 
-    # 3. per-layer decode from the layer's own merged table
-    def decode_leaf(table, cand_l, t_seed, sk_seed):
-        sk = countsketch.CountSketch(table=table, seed=sk_seed)
-        est = countsketch.estimate(sk, cand_l)
-        ids, score = _dedup_ids(cand_l, jnp.abs(est))
-        top_score, top_i = jax.lax.top_k(score, k_leaf + 1)
-        sel = ids[top_i[:k_leaf]]
-        est_v = transforms.invert_frequency(
-            sel.astype(jnp.uint32), countsketch.estimate(sk, sel), cc.p,
-            t_seed)
-        return sel, est_v, top_score[k_leaf]
+    # 3. per-layer decode THROUGH THE SAMPLER REGISTRY: each layer's merged
+    # table + deduped candidate union IS a one-pass WORp state, so the
+    # decode is the engine's batched sample -- the (k+1)-threshold top-k and
+    # Eq. (6) inversion live in one place (repro.core.worp via the "onepass"
+    # spec), and the L layers' candidate estimates come from one batched
+    # query dispatch (Pallas kernel on TPU).
+    from repro import engine as E
 
-    sel, est_vals, tau = jax.vmap(decode_leaf)(tables, cand, t_seeds,
-                                               sk_seeds)        # (L, k), ...
+    def dedup_leaf(cand_l):
+        order = jnp.argsort(cand_l)
+        si = cand_l[order]
+        dup = jnp.concatenate([jnp.array([False]), si[1:] == si[:-1]])
+        return jnp.where(dup, _EMPTY, si)
+
+    state = worp.OnePassState(
+        sketch=countsketch.CountSketch(table=tables, seed=sk_seeds),
+        cand_keys=jax.vmap(dedup_leaf)(cand),
+        seed_transform=t_seeds)
+    s = E.onepass_sample_batched(state, k_leaf, cc.p, cc.scheme)
+    sel, est_vals, tau = s.keys, s.freqs, s.threshold       # (L, k), ..., (L,)
+    live = sel != _EMPTY  # fewer than k_leaf unique candidates -> -1 slots
 
     nworkers = jax.lax.psum(jnp.float32(1.0), axis_names)
     if cc.mode == "twopass":
-        exact_local = jnp.take_along_axis(a_pad, sel, axis=1)   # (L, k)
-        vals = jax.lax.psum(exact_local, axis_names) / nworkers
+        exact_local = jnp.take_along_axis(
+            a_pad, jnp.where(live, sel, 0), axis=1)            # (L, k)
+        vals = jax.lax.psum(jnp.where(live, exact_local, 0.0),
+                            axis_names) / nworkers
     else:
-        vals = est_vals / nworkers
+        vals = jnp.where(live, est_vals, 0.0) / nworkers
 
     sparse_leaves, err_leaves = [], []
     for li, (a, size, g) in enumerate(zip(accs, sizes, leaves_g)):
-        sp = jnp.zeros((size,), jnp.float32).at[sel[li]].set(vals[li])
+        # ids can be -1 (empty slot) or past the leaf's end (padded-slot
+        # proposals, see above): route both to a dropped scratch slot
+        # instead of relying on scatter out-of-bounds semantics.
+        hit = live[li] & (sel[li] < size)
+        safe = jnp.where(hit, sel[li], size)
+        sp = jnp.zeros((size + 1,), jnp.float32).at[safe].set(
+            jnp.where(hit, vals[li], 0.0))[:size]
         sparse_leaves.append(sp.reshape(g.shape))
         err_leaves.append(jnp.where(sp != 0.0, 0.0, a).reshape(g.shape))
 

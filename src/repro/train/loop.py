@@ -3,6 +3,12 @@
 Used by examples/ and the integration tests; the same loop drives a real
 cluster (swap the mesh for the production one and point ``ckpt_dir`` at
 durable storage).
+
+``analytics_sampler`` turns on stream analytics over the training tokens:
+the batch tokens feed a one-stream ``SketchEngine`` backed by any registered
+sampler (onepass / twopass / perfect / tv), and the final metrics include
+the top-token WOR sample -- the data-pipeline tie-in (which tokens dominate
+the corpus the model is actually seeing) at sketch cost, not vocab cost.
 """
 from __future__ import annotations
 
@@ -11,9 +17,11 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import ZipfStream
+from repro.engine import EngineConfig, SketchEngine
 from repro.models import model as M
 from repro.optim import adamw, gradcomp
 from repro.train import checkpoint, steps
@@ -34,6 +42,8 @@ def run_training(
     log_every: int = 10,
     seed: int = 0,
     print_fn: Callable[[str], None] = print,
+    analytics_sampler: Optional[str] = None,
+    analytics_topk: int = 16,
 ) -> Dict[str, Any]:
     """Train ``cfg`` on the synthetic Zipf stream.  Returns final metrics."""
     key = jax.random.PRNGKey(seed)
@@ -62,6 +72,15 @@ def run_training(
             state, start_step = restored, rstep + 1
             print_fn(f"[ckpt] resumed from step {rstep}")
 
+    analytics = None
+    if analytics_sampler is not None:
+        # one engine stream over the whole token stream; any registry sampler
+        analytics = SketchEngine(EngineConfig(
+            num_streams=1, rows=5, width=max(256, 31 * analytics_topk),
+            candidates=4 * analytics_topk, capacity=4 * analytics_topk,
+            seed=seed ^ 0x70CEB5, sampler=analytics_sampler,
+            domain=cfg.vocab_size, num_samplers=max(4, analytics_topk)))
+
     watchdog = StragglerWatchdog(threshold=3.0)
     losses = []
     for step in range(start_step, num_steps):
@@ -71,12 +90,25 @@ def run_training(
         loss = float(metrics["loss"])
         watchdog.step_end(step)
         losses.append(loss)
+        if analytics is not None:
+            toks = b["tokens"].reshape(1, -1).astype(jnp.int32)
+            analytics.update(toks, jnp.ones_like(toks, jnp.float32))
         if step % log_every == 0:
             print_fn(f"step {step:5d}  loss {loss:.4f}")
         if ckpt_dir and (step + 1) % ckpt_every == 0:
             checkpoint.save(ckpt_dir, step, state)
     if ckpt_dir:
         checkpoint.save(ckpt_dir, num_steps - 1, state)
-    return {"final_loss": losses[-1] if losses else float("nan"),
-            "losses": losses, "stragglers": watchdog.flagged,
-            "state": state}
+    out = {"final_loss": losses[-1] if losses else float("nan"),
+           "losses": losses, "stragglers": watchdog.flagged,
+           "state": state}
+    if analytics is not None:
+        s = analytics.sample(analytics_topk)
+        keys = np.asarray(s.keys)[0]
+        freqs = np.asarray(s.freqs)[0]
+        out["top_tokens"] = [(int(t), float(f))
+                             for t, f in zip(keys, freqs) if t >= 0]
+        print_fn(f"[analytics/{analytics_sampler}] top-{analytics_topk} "
+                 "tokens (WOR sample): "
+                 + " ".join(f"{t}:{f:.0f}" for t, f in out["top_tokens"]))
+    return out

@@ -13,12 +13,29 @@ import numpy as np
 import pytest
 
 from repro import engine as E
-from repro.core import countsketch, worp
+from repro.core import countsketch, transforms, worp
+from repro.core import sampler as core_sampler
 from repro.distributed import sharding as shd
 
 jax.config.update("jax_platform_name", "cpu")
 
 B, ROWS, WIDTH, CAND, CAP = 4, 5, 256, 64, 64
+
+# per-sampler overrides for the registry contract (small enough to keep the
+# parametrized sweep fast; "perfect" needs a domain covering the test keys)
+SAMPLER_TEST_CFG = {
+    "onepass": {},
+    "twopass": {},
+    "perfect": dict(domain=2000),
+    "tv": dict(num_samplers=3, rows=3, width=128, candidates=16),
+}
+
+
+def _registry_cfg(name, scheme=transforms.PPSWOR):
+    base = dict(num_streams=B, rows=3, width=128, candidates=24, capacity=24,
+                p=1.0, scheme=scheme, seed=11, sampler=name)
+    base.update(SAMPLER_TEST_CFG[name])
+    return E.EngineConfig(**base)
 
 
 def _cfg(**kw):
@@ -354,6 +371,104 @@ class TestEngineGradComp:
                 atol=1e-5)
 
 
+class TestRegistryContract:
+    """EVERY registered sampler satisfies the engine's batched==single-stream
+    consistency contract: the vmapped/jitted batched ops equal a Python loop
+    of the spec's single-stream functions.  Discrete outputs (keys) must be
+    bitwise equal; accumulated fp leaves get 1-ulp reduction-order slack."""
+
+    @pytest.mark.parametrize("scheme", [transforms.PPSWOR,
+                                        transforms.PRIORITY])
+    @pytest.mark.parametrize("name", core_sampler.available())
+    def test_batched_equals_single(self, name, scheme):
+        cfg = _registry_cfg(name, scheme)
+        spec = E.engine_spec(cfg)
+        bops = E.batched_ops(spec)
+        keys, vals = _batches(seed=5, n=60)
+        sks, tss = E.derive_stream_seeds(cfg)
+
+        st = bops.init(sks, tss)
+        st = bops.update(st, keys[:, :30], vals[:, :30])
+        st = bops.update(st, keys[:, 30:], vals[:, 30:])
+        m = bops.merge(st, st)
+        s = bops.sample(m, k=4)
+        est = bops.estimate(m, keys[:, :10])
+
+        for b in range(cfg.num_streams):
+            ref = spec.init(sks[b], tss[b])
+            ref = spec.update(ref, keys[b, :30], vals[b, :30])
+            ref = spec.update(ref, keys[b, 30:], vals[b, 30:])
+            refm = spec.merge(ref, ref)
+            sref = spec.sample(refm, 4)
+            assert np.array_equal(np.asarray(s.keys[b]),
+                                  np.asarray(sref.keys)), name
+            np.testing.assert_allclose(np.asarray(s.freqs[b]),
+                                       np.asarray(sref.freqs),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(float(s.threshold[b]),
+                                       float(sref.threshold),
+                                       rtol=1e-5, equal_nan=True)
+            np.testing.assert_allclose(np.asarray(est[b]),
+                                       np.asarray(spec.estimate(
+                                           refm, keys[b, :10])),
+                                       rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("name", ["onepass", "twopass"])
+    def test_two_phase_batched_equals_single(self, name):
+        """Exact pass-II hooks obey the same vmap-consistency contract."""
+        cfg = _registry_cfg(name)
+        spec = E.engine_spec(cfg)
+        assert spec.two_phase
+        bops = E.batched_ops(spec)
+        keys, vals = _batches(seed=6, n=50)
+        sks, tss = E.derive_stream_seeds(cfg)
+
+        st = bops.update(bops.init(sks, tss), keys, vals)
+        st2 = bops.update2(bops.init2(st), st, keys, vals)
+        s = bops.sample2(st2, k=4)
+
+        for b in range(cfg.num_streams):
+            ref = spec.update(spec.init(sks[b], tss[b]), keys[b], vals[b])
+            ref2 = spec.update2(spec.init2(ref), ref, keys[b], vals[b])
+            sref = spec.sample2(ref2, 4)
+            assert np.array_equal(np.asarray(s.keys[b]),
+                                  np.asarray(sref.keys)), name
+            np.testing.assert_allclose(np.asarray(s.freqs[b]),
+                                       np.asarray(sref.freqs), rtol=1e-5)
+
+    @pytest.mark.parametrize("name", core_sampler.available())
+    def test_engine_class_roundtrip(self, name):
+        """SketchEngine(cfg, sampler=name) works end to end for every
+        registered sampler (update/merge_with/sample shapes)."""
+        cfg = _registry_cfg(name)
+        keys, vals = _batches(seed=12, n=40)
+        a = E.SketchEngine(cfg)
+        b_ = E.SketchEngine(cfg, sampler=name)
+        a.update(keys, vals)
+        b_.update(keys, vals * 2.0)
+        a.merge_with(b_)
+        s = a.sample(4)
+        assert s.keys.shape == (B, 4)
+        assert a.estimate(keys[:, :8]).shape == (B, 8)
+
+    def test_spec_merge_in_distributed_trees(self):
+        """tree_merge accepts a SamplerSpec directly (spec-aware merge)."""
+        cfg = _registry_cfg("onepass")
+        spec = E.engine_spec(cfg)
+        rng = np.random.default_rng(13)
+        sts = []
+        for i in range(3):
+            st = spec.init(jnp.uint32(3), jnp.uint32(77))
+            sts.append(spec.update(
+                st, jnp.asarray(rng.integers(0, 500, 40), jnp.int32),
+                jnp.asarray(rng.normal(size=40).astype(np.float32))))
+        got = shd.tree_merge(sts, spec)
+        want = spec.merge(spec.merge(sts[0], sts[1]), sts[2])
+        np.testing.assert_allclose(np.asarray(got.sketch.table),
+                                   np.asarray(want.sketch.table),
+                                   rtol=1e-5, atol=1e-5)
+
+
 class TestSketchEngineClass:
     def test_update_sample_merge_roundtrip(self):
         cfg = _cfg(shared_seeds=True)
@@ -371,6 +486,33 @@ class TestSketchEngineClass:
         eng = E.SketchEngine(_cfg(shared_seeds=False))
         with pytest.raises(ValueError):
             eng.collapse()
+
+    def test_merge_with_rejects_mismatched_cfg(self):
+        """Engines with different seeds/shapes hash differently stream-by-
+        stream: merging them must fail loudly, naming the bad fields."""
+        a = E.SketchEngine(_cfg())
+        with pytest.raises(ValueError, match="seed"):
+            a.merge_with(E.SketchEngine(_cfg(seed=8)))
+        with pytest.raises(ValueError, match="width"):
+            a.merge_with(E.SketchEngine(_cfg(width=2 * WIDTH)))
+        with pytest.raises(ValueError, match="shared_seeds"):
+            a.merge_with(E.SketchEngine(_cfg(shared_seeds=True)))
+        with pytest.raises(ValueError, match="sampler"):
+            a.merge_with(E.SketchEngine(_cfg(), sampler="twopass"))
+        with pytest.raises(TypeError):
+            a.merge_with("not an engine")
+        # matching cfg still merges
+        a.merge_with(E.SketchEngine(_cfg()))
+
+    def test_update_dense_requires_onepass(self):
+        eng = E.SketchEngine(_registry_cfg("perfect"))
+        with pytest.raises(ValueError, match="onepass"):
+            eng.update_dense(jnp.ones((B, 32), jnp.float32))
+
+    def test_freeze_requires_two_phase(self):
+        eng = E.SketchEngine(_registry_cfg("perfect"))
+        with pytest.raises(ValueError, match="second pass"):
+            eng.freeze()
 
     def test_pass2_exact_frequencies(self):
         cfg = _cfg()

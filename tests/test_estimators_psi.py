@@ -57,6 +57,28 @@ class TestEstimators:
         # estimated total key count is near the heavy-region mass it covers
         assert np.all(np.diff(np.asarray(mags)) <= 1e-6)  # sorted desc
 
+    def test_rank_frequency_ht_vs_perfect_sampler(self):
+        """Fig. 2 contract, checked against the perfect sampler: cumulative
+        HT weights estimate the TRUE rank of each sampled magnitude
+        (#keys with |nu| >= mag).  In the sample's head the inclusion
+        probabilities are ~1, so estimated ranks must track exactly; over
+        seeds the estimate must be close in the mean as well."""
+        n, k, p = 2000, 100, 1.0
+        freqs = zipf_freqs(n, 1.5, seed=30)
+        sorted_desc = np.sort(np.abs(freqs))[::-1]
+        med_rel = []
+        for t in range(10):
+            s = perfect.ppswor_sample(jnp.asarray(freqs), k, p, 500 + t)
+            mags, wts = estimators.rank_frequency_estimate(s, p)
+            mags, wts = np.asarray(mags), np.asarray(wts)
+            est_rank = np.cumsum(wts)
+            true_rank = np.searchsorted(-sorted_desc, -mags, side="right")
+            m = k // 2  # head of the sample: p_x ~ 1
+            rel = (np.abs(est_rank[:m] - true_rank[:m])
+                   / np.maximum(true_rank[:m], 1.0))
+            med_rel.append(np.median(rel))
+        assert np.median(med_rel) < 0.15, med_rel
+
 
 class TestPsi:
     def test_simulation_vs_theorem_bound(self):

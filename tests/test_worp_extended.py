@@ -97,6 +97,41 @@ class TestExtendedSample:
             sample.transformed)).min()) + 1e-6
 
 
+class TestDegenerateBuffers:
+    """An all-empty (or under-filled) pass-II buffer used to push L = inf
+    through the certification bar (inf + -inf = NaN); the bar must instead
+    certify nothing, with a clean tau = inf."""
+
+    def test_all_empty_buffer_certifies_nothing(self):
+        st = worp.twopass_init(capacity=16, seed_transform=7)
+        certified, tau = worp.twopass_extended_sample(st, 4, 1.0)
+        c = np.asarray(certified)
+        assert c.dtype == np.bool_ and not c.any()
+        assert np.isposinf(float(tau))
+
+    def test_underfull_buffer_certifies_nothing(self):
+        """Fewer than k+1 live keys: the (k+1)-st nu* needed for the error
+        bound does not exist, so no key can be certified."""
+        st = worp.twopass_init(capacity=16, seed_transform=7)
+        sk = worp.onepass_init(3, 64, 8, 3, 7).sketch
+        keys = jnp.arange(3, dtype=jnp.int32)
+        st = worp.twopass_update(st, sk, keys, jnp.ones((3,), jnp.float32))
+        certified, tau = worp.twopass_extended_sample(st, 4, 1.0)
+        assert not np.asarray(certified).any()
+        assert np.isposinf(float(tau))
+
+    def test_exactly_k_plus_one_live_keys_still_certifies(self):
+        """The smallest well-defined buffer (k+1 live keys) behaves as
+        before the guard: finite bar, possibly-certified keys."""
+        n, k = 400, 4
+        freqs = zipf_freqs(n, 2.0, seed=17)
+        _, st2 = _run_two_pass(freqs, k, 1.0, 13)
+        # buffer capacity 2*(k+1) = 10 > k+1 live -> normal path
+        certified, tau = worp.twopass_extended_sample(st2, k, 1.0)
+        assert int(np.asarray(certified).sum()) >= k
+        assert np.isfinite(float(tau))
+
+
 class TestFailureTest:
     def test_well_provisioned_passes(self):
         """k x 31 sketch on Zipf data: the failure flag must NOT fire."""
