@@ -1,17 +1,20 @@
 """SketchEngine throughput: batched multi-stream data plane vs Python loops.
 
-Four measurements (interpret-mode wall times on CPU; on TPU the same calls
+Five measurements (interpret-mode wall times on CPU; on TPU the same calls
 compile via Mosaic and the batched matmul additionally packs the MXU):
 
-  * update kernel: ONE batched pallas_call over B streams vs B single-stream
+  * update kernel:  ONE batched pallas_call over B streams vs B single-stream
     pallas_call dispatches (the acceptance ratio for the engine data plane)
-  * query kernel:  ONE batched estimate pallas_call (the path behind
+  * scatter kernel: ONE batched turnstile scatter pallas_call (signed sparse
+    (key, +-value) batches, the ``SketchEngine.ingest`` data plane) vs B
+    single-stream dispatches, with a parity guard against the pure-jnp
+    ``ref`` oracle -- kernel/oracle drift fails the run (and CI)
+  * query kernel:   ONE batched estimate pallas_call (the path behind
     ``onepass_sample_batched`` and the dense candidate refresh) vs B
-    single-stream query dispatches, with a parity guard against the
-    pure-jnp ``ref`` oracle
-  * vmap path:     registry-spec batched ``update`` vs a Python loop of
+    single-stream query dispatches, with the same ref parity guard
+  * vmap path:      registry-spec batched ``update`` vs a Python loop of
     single-stream spec updates (sparse keyed batches, the control plane)
-  * merge tree:    O(log B) ``reduce_streams`` collapse vs sequential merging
+  * merge tree:     O(log B) ``reduce_streams`` collapse vs sequential merging
 
 CSV derived column reports the batched/looped ratio directly.
 """
@@ -22,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import engine as E
-from repro.kernels import ops
+from repro.kernels import ops, ref
 from .common import timeit
 
 B_STREAMS = 16
@@ -53,6 +56,45 @@ def run(verbose: bool = True, fast: bool = False):
                  f"ns_per_elem={us_b * 1e3 / (B_STREAMS * n):.2f}"))
     rows.append((f"engine_kernel_looped_B{B_STREAMS}_n{n}", us_l,
                  f"batched_speedup={us_l / us_b:.2f}x"))
+
+    # -- turnstile scatter data plane: signed sparse batches ----------------
+    # (the SketchEngine.ingest path: arbitrary keys, deletions included)
+    skeys = jnp.asarray(rng.integers(0, 1 << 20, (B_STREAMS, n)), jnp.int32)
+    svals = jnp.asarray(rng.normal(size=(B_STREAMS, n)).astype(np.float32))
+
+    def scatter_batched():
+        return ops.sketch_sparse_batch(skeys, svals, r, w, seeds, p=1.0,
+                                       transform_seeds=tseeds)
+
+    def scatter_looped():
+        return [ops.sketch_sparse_vector(skeys[b], svals[b], r, w,
+                                         seed=int(seeds[b]), p=1.0,
+                                         transform_seed=int(tseeds[b]))
+                for b in range(B_STREAMS)]
+
+    def scatter_ref_jnp():
+        return ref.countsketch_scatter_batched_ref(skeys, svals, r, w, seeds,
+                                                   p=1.0,
+                                                   transform_seeds=tseeds)
+
+    # parity guard: the CSV speedup rows are only meaningful if the scatter
+    # kernel matches the ref.py oracle (kernel/oracle drift fails the run).
+    # atol scales with the table's magnitude: the fused Exp[1] transform
+    # produces values up to ~1e7, so sum-order cancellation leaves absolute
+    # residues proportional to that scale, not to 1.
+    want = np.asarray(scatter_ref_jnp())
+    np.testing.assert_allclose(np.asarray(scatter_batched()), want,
+                               rtol=1e-4,
+                               atol=1e-5 * max(1.0, np.abs(want).max()))
+    us_sb = timeit(scatter_batched)
+    us_sl = timeit(scatter_looped)
+    us_sr = timeit(scatter_ref_jnp)
+    rows.append((f"engine_scatter_kernel_batched_B{B_STREAMS}_n{n}", us_sb,
+                 f"ns_per_elem={us_sb * 1e3 / (B_STREAMS * n):.2f}"))
+    rows.append((f"engine_scatter_kernel_looped_B{B_STREAMS}_n{n}", us_sl,
+                 f"batched_speedup={us_sl / us_sb:.2f}x"))
+    rows.append((f"engine_scatter_ref_jnp_B{B_STREAMS}_n{n}", us_sr,
+                 f"ref_over_kernel={us_sr / us_sb:.2f}x"))
 
     # -- vmap control plane (through the sampler registry) ------------------
     cfg = E.EngineConfig(num_streams=B_STREAMS, rows=5, width=31 * 32,

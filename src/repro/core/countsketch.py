@@ -74,7 +74,16 @@ def update(sk: CountSketch, keys: jnp.ndarray, values: jnp.ndarray) -> CountSket
 
 
 def merge(a: CountSketch, b: CountSketch) -> CountSketch:
-    """Merge sketches of two datasets (same params+seed): table addition."""
+    """Merge sketches of two datasets (same params+seed): table addition.
+
+    Tables hashed under different seeds do not add meaningfully; concrete
+    seed disagreement fails loudly (tracer seeds inside jit/vmap skip the
+    check -- the engine layer validates configs there)."""
+    if hashing.seeds_concretely_differ(a.seed, b.seed):
+        raise ValueError(
+            f"countsketch.merge: cannot merge sketches with different hash "
+            f"seeds ({a.seed!r} vs {b.seed!r}) -- bucket/sign hashes "
+            f"disagree, so the summed table is garbage")
     return CountSketch(table=a.table + b.table, seed=a.seed)
 
 

@@ -88,3 +88,18 @@ def row_salt(seed, row) -> jnp.ndarray:
 def key_hash_to_domain(keys: jnp.ndarray, salt, n: int) -> jnp.ndarray:
     """KeyHash: map arbitrary (integer-encoded) keys into [n] (paper Eq. 13)."""
     return (hash_u32(keys, salt) % jnp.uint32(n)).astype(jnp.int32)
+
+
+def seeds_concretely_differ(a, b) -> bool:
+    """True when two seed arrays are concretely known to differ.
+
+    The composability contract (module docstring) requires merged shards to
+    share seeds; this is the mergeability check's primitive.  Inside
+    jit/vmap seeds are tracers and cannot be inspected -- the check degrades
+    to a no-op there (the engine layer validates configs instead);
+    host-side merges of concrete states get the full check.
+    """
+    try:
+        return bool(jnp.any(jnp.asarray(a) != jnp.asarray(b)))
+    except jax.errors.ConcretizationTypeError:
+        return False

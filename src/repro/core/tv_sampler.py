@@ -57,12 +57,7 @@ def init(num_samplers: int, rows: int, width: int, candidates: int,
 def _update_one(sk, ck, tseed, keys, values, p, scheme):
     tvals = transforms.transform_values(keys, values, p, tseed, scheme)
     sk2 = countsketch.update(sk, keys, tvals)
-    all_keys = jnp.concatenate([ck, keys])
-    est = jnp.abs(countsketch.estimate(sk2, all_keys))
-    est = jnp.where(all_keys == _EMPTY, _NEG, est)
-    ck2, _, _ = worp._dedup_topc(all_keys, jnp.zeros_like(est), est,
-                                 ck.shape[0])
-    return sk2, ck2
+    return sk2, worp.refresh_candidates(sk2, ck, keys)
 
 
 def update(st: TVSamplerState, keys: jnp.ndarray, values: jnp.ndarray,
@@ -81,15 +76,7 @@ def update(st: TVSamplerState, keys: jnp.ndarray, values: jnp.ndarray,
 def merge(a: TVSamplerState, b: TVSamplerState) -> TVSamplerState:
     sk = jax.vmap(countsketch.merge)(a.sketches, b.sketches)
 
-    def remerge(sk_i, ka, kb):
-        all_keys = jnp.concatenate([ka, kb])
-        est = jnp.abs(countsketch.estimate(sk_i, all_keys))
-        est = jnp.where(all_keys == _EMPTY, _NEG, est)
-        ck, _, _ = worp._dedup_topc(all_keys, jnp.zeros_like(est), est,
-                                    ka.shape[0])
-        return ck
-
-    ck = jax.vmap(remerge)(sk, a.cand_keys, b.cand_keys)
+    ck = jax.vmap(worp.refresh_candidates)(sk, a.cand_keys, b.cand_keys)
     return TVSamplerState(sketches=sk, cand_keys=ck,
                           transform_seeds=a.transform_seeds,
                           rhh=worp.onepass_merge(a.rhh, b.rhh))

@@ -25,11 +25,33 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import countsketch, transforms
+from . import countsketch, hashing, transforms
 from .perfect import Sample
 
 _EMPTY = jnp.int32(-1)
 _NEG = jnp.float32(-jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# merge safety: shards must share hash/transform seeds
+# ---------------------------------------------------------------------------
+
+def check_merge_seeds(fn: str, **seed_pairs) -> None:
+    """Raise if any named (a, b) seed pair concretely disagrees.
+
+    Merging states whose p-ppswor transform (or sketch hash) seeds differ
+    silently yields garbage: the shards disagree on every r_x, so the
+    "union" transformed frequencies are meaningless.  Mirrors
+    ``SketchEngine.merge_with``'s config validation at the core level.
+    """
+    for name, (sa, sb) in seed_pairs.items():
+        if hashing.seeds_concretely_differ(sa, sb):
+            raise ValueError(
+                f"{fn}: cannot merge states with different {name} "
+                f"({sa!r} vs {sb!r}) -- shards must be built from identical "
+                f"seeds or the merged sample is garbage (the paper's "
+                f"composability requires the shared-hash agreement of "
+                f"Sec. 2.2)")
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +95,22 @@ def onepass_init(
     )
 
 
+def refresh_candidates(sk: countsketch.CountSketch, cand_keys: jnp.ndarray,
+                       keys: jnp.ndarray, capacity: int | None = None
+                       ) -> jnp.ndarray:
+    """THE candidate-buffer policy: top-``capacity`` of (old candidates U
+    new keys) by current |R.Est|, -1 keys masked out.  Single definition so
+    the jnp update path, merges, the TV cascade, and every kernel fast path
+    refresh identically (the contract the engine's bitwise tests pin)."""
+    all_keys = jnp.concatenate([cand_keys, keys])
+    est = jnp.abs(countsketch.estimate(sk, all_keys))
+    est = jnp.where(all_keys == _EMPTY, _NEG, est)
+    if capacity is None:
+        capacity = cand_keys.shape[0]
+    ck, _, _ = _dedup_topc(all_keys, jnp.zeros_like(est), est, capacity)
+    return ck
+
+
 def onepass_update(
     st: OnePassState, keys: jnp.ndarray, values: jnp.ndarray, p: float,
     scheme: str = transforms.PPSWOR,
@@ -83,22 +121,15 @@ def onepass_update(
         keys, jnp.asarray(values, jnp.float32), p, st.seed_transform, scheme
     )
     sk = countsketch.update(st.sketch, keys, tvals)
-    # Candidate refresh: current estimates of (old candidates U batch keys).
-    all_keys = jnp.concatenate([st.cand_keys, keys])
-    est = jnp.abs(countsketch.estimate(sk, all_keys))
-    est = jnp.where(all_keys == _EMPTY, _NEG, est)
-    ck, _, _ = _dedup_topc(all_keys, jnp.zeros_like(est), est,
-                           st.cand_keys.shape[0])
+    ck = refresh_candidates(sk, st.cand_keys, keys)
     return OnePassState(sketch=sk, cand_keys=ck, seed_transform=st.seed_transform)
 
 
 def onepass_merge(a: OnePassState, b: OnePassState) -> OnePassState:
+    check_merge_seeds("onepass_merge",
+                      seed_transform=(a.seed_transform, b.seed_transform))
     sk = countsketch.merge(a.sketch, b.sketch)
-    all_keys = jnp.concatenate([a.cand_keys, b.cand_keys])
-    est = jnp.abs(countsketch.estimate(sk, all_keys))
-    est = jnp.where(all_keys == _EMPTY, _NEG, est)
-    ck, _, _ = _dedup_topc(all_keys, jnp.zeros_like(est), est,
-                           a.cand_keys.shape[0])
+    ck = refresh_candidates(sk, a.cand_keys, b.cand_keys)
     return OnePassState(sketch=sk, cand_keys=ck, seed_transform=a.seed_transform)
 
 
@@ -125,11 +156,19 @@ def onepass_sample_from_estimates(
     est_sel = est[top_i[:k]]
     freqs = transforms.invert_frequency(sel, est_sel, p, st.seed_transform,
                                         scheme)
+    # Underfull candidate buffers select _EMPTY padding slots; their
+    # (meaningless) sketch estimates would leak junk into downstream HT
+    # estimators (freqs) and into failure_test's min |transformed| --
+    # padded slots report zero for both (an underfull sample then also
+    # correctly trips the failure test: its k-th frequency IS below any
+    # error scale).
+    pad = sel == _EMPTY
+    freqs = jnp.where(pad, 0.0, freqs)
     return Sample(
         keys=sel,
         freqs=freqs,
         threshold=top_mag[k],
-        transformed=est_sel,
+        transformed=jnp.where(pad, 0.0, est_sel),
     )
 
 
@@ -163,6 +202,27 @@ def twopass_init(capacity: int, seed_transform) -> TwoPassState:
     )
 
 
+def twopass_update_from_priorities(
+    st: TwoPassState,
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    prio: jnp.ndarray,
+) -> TwoPassState:
+    """``twopass_update`` with the |R.Est| priorities precomputed -- the
+    seam that lets the batched engine obtain priorities for all B streams
+    from one batched query dispatch (mirroring
+    ``onepass_sample_from_estimates``)."""
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.float32)
+    prio = jnp.where(keys == _EMPTY, _NEG, jnp.abs(prio))
+    all_k = jnp.concatenate([st.keys, keys])
+    all_v = jnp.concatenate([st.freqs, values])
+    all_p = jnp.concatenate([st.priority, prio])
+    nk, nv, np_ = _dedup_topc(all_k, all_v, all_p, st.keys.shape[0])
+    return TwoPassState(keys=nk, freqs=nv, priority=np_,
+                        seed_transform=st.seed_transform)
+
+
 def twopass_update(
     st: TwoPassState,
     frozen: countsketch.CountSketch,
@@ -175,18 +235,13 @@ def twopass_update(
     |R.Est| do not change during pass II.
     """
     keys = jnp.asarray(keys, jnp.int32)
-    values = jnp.asarray(values, jnp.float32)
-    prio = jnp.abs(countsketch.estimate(frozen, keys))
-    prio = jnp.where(keys == _EMPTY, _NEG, prio)
-    all_k = jnp.concatenate([st.keys, keys])
-    all_v = jnp.concatenate([st.freqs, values])
-    all_p = jnp.concatenate([st.priority, prio])
-    nk, nv, np_ = _dedup_topc(all_k, all_v, all_p, st.keys.shape[0])
-    return TwoPassState(keys=nk, freqs=nv, priority=np_,
-                        seed_transform=st.seed_transform)
+    prio = countsketch.estimate(frozen, keys)
+    return twopass_update_from_priorities(st, keys, values, prio)
 
 
 def twopass_merge(a: TwoPassState, b: TwoPassState) -> TwoPassState:
+    check_merge_seeds("twopass_merge",
+                      seed_transform=(a.seed_transform, b.seed_transform))
     all_k = jnp.concatenate([a.keys, b.keys])
     all_v = jnp.concatenate([a.freqs, b.freqs])
     all_p = jnp.concatenate([a.priority, b.priority])
@@ -242,7 +297,7 @@ def twopass_extended_sample(st: TwoPassState, k: int, p: float,
 
 
 def failure_test(sk: countsketch.CountSketch, sample: Sample, k: int,
-                 p: float, q: float = 2.0) -> jnp.ndarray:
+                 p: float) -> jnp.ndarray:
     """Appendix A 'Testing for failure': flag if the k-th estimated transformed
     frequency is not above the sketch's own error scale."""
     err = countsketch.l2_error_bound(sk, k)

@@ -9,6 +9,11 @@ composable one-pass WORp sketch (one per shard, merged across shards), and
 ``selection_weights`` turns the WOR sample into p-th-power frequency weights
 for example re-weighting (paper Sec. 1: language models weight by nu^p,
 p < 1, to mitigate frequent examples).
+
+Turnstile emission: ``TurnstileZipfStream`` produces sparse SIGNED
+``(key, +-value)`` batches -- insertions plus deterministic retractions of
+earlier insertions -- feeding the engine's scatter-kernel ingest plane
+(``SketchEngine.ingest``) and ``FrequencySketcher.observe_signed``.
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import worp
+from repro.core import countsketch, worp
 
 
 class ZipfStream(NamedTuple):
@@ -47,6 +52,51 @@ class ZipfStream(NamedTuple):
             step += 1
 
 
+class TurnstileZipfStream(NamedTuple):
+    """Signed sparse Zipf update stream (the paper's turnstile model).
+
+    Batch ``t`` emits ``n`` fresh Zipf[alpha] insertions (+1) followed by
+    RETRACTIONS (-1) of the first ``floor(n * delete_fraction)`` insertions
+    of batch ``t-1`` -- e.g. expiring a sliding window, or compensating
+    events in a log.  Deterministic: ``sparse_batch_at(step, shard, n)`` is
+    a pure function (same fault-tolerance contract as ``ZipfStream``), and
+    every deletion exactly cancels a prior insertion, so the aggregated
+    frequency vector stays nonnegative and insert-then-delete pairs vanish
+    from any linear sketch.
+    """
+    vocab_size: int
+    alpha: float
+    seed: int
+    delete_fraction: float = 0.25
+
+    def _inserts(self, step: int, shard: int, n: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard]))
+        ranks = rng.zipf(self.alpha, size=n)
+        return np.minimum(ranks - 1, self.vocab_size - 1).astype(np.int32)
+
+    def sparse_batch_at(self, step: int, shard: int, n: int
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """(keys, values): n inserts, then batch t-1's leading retractions."""
+        ins = self._inserts(step, shard, n)
+        keys = [ins]
+        vals = [np.ones(n, np.float32)]
+        ndel = int(n * self.delete_fraction)
+        if step > 0 and ndel:
+            keys.append(self._inserts(step - 1, shard, n)[:ndel])
+            vals.append(-np.ones(ndel, np.float32))
+        return np.concatenate(keys), np.concatenate(vals)
+
+    def aggregate_freqs(self, shard: int, nsteps: int, n: int) -> np.ndarray:
+        """Exact aggregated frequency vector of steps [0, nsteps) -- the
+        ground truth a turnstile sketch of the same stream must match."""
+        f = np.zeros(self.vocab_size, np.float64)
+        for t in range(nsteps):
+            k, v = self.sparse_batch_at(t, shard, n)
+            np.add.at(f, k, v)
+        return f
+
+
 class FrequencySketcher:
     """Composable WORp sketch over a token stream (per shard; mergeable)."""
 
@@ -62,6 +112,30 @@ class FrequencySketcher:
         flat = tokens.reshape(-1)
         self.state = worp.onepass_update(
             self.state, flat, jnp.ones_like(flat, jnp.float32), self.p)
+
+    def observe_signed(self, keys, values, use_kernel: bool = False):
+        """Turnstile ingest of a sparse signed (key, +-value) batch, e.g.
+        from ``TurnstileZipfStream.sparse_batch_at``: linearity means a
+        ``-v`` update exactly cancels a prior ``+v`` one.  With
+        ``use_kernel`` the sketch delta goes through the Pallas scatter
+        kernel (``kernels.ops.sketch_sparse_vector``); candidate refresh is
+        shared either way."""
+        keys = jnp.asarray(keys, jnp.int32).reshape(-1)
+        values = jnp.asarray(values, jnp.float32).reshape(-1)
+        if not use_kernel:
+            self.state = worp.onepass_update(self.state, keys, values, self.p)
+            return
+        from repro.kernels import ops as kernel_ops
+
+        sk = self.state.sketch
+        delta = kernel_ops.sketch_sparse_vector(
+            keys, values, sk.table.shape[0], sk.table.shape[1], sk.seed,
+            p=self.p, transform_seed=self.state.seed_transform)
+        sk = countsketch.CountSketch(table=sk.table + delta, seed=sk.seed)
+        self.state = worp.OnePassState(
+            sketch=sk,
+            cand_keys=worp.refresh_candidates(sk, self.state.cand_keys, keys),
+            seed_transform=self.state.seed_transform)
 
     def merge_from(self, other: "FrequencySketcher"):
         self.state = worp.onepass_merge(self.state, other.state)

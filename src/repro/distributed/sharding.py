@@ -19,8 +19,11 @@ import threading
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hashing
 
 # ---------------------------------------------------------------------------
 # rule sets
@@ -180,12 +183,40 @@ def _resolve_merge(merge_fn):
         f"{type(merge_fn).__name__}")
 
 
+def _check_shard_seeds(states: Sequence) -> None:
+    """Merge safety: all shards must agree on every seed leaf.
+
+    Sampler-state seeds (sketch hash seeds, p-ppswor transform seeds) are
+    exactly the uint32 leaves of the state pytree, so a generic leaf-wise
+    comparison covers every registered sampler without naming one.  Shards
+    hashed under different seeds disagree on every r_x/bucket/sign, and
+    merging them silently yields garbage samples -- fail loudly instead
+    (mirroring ``SketchEngine.merge_with`` and ``worp.check_merge_seeds``).
+    Tracer leaves (inside jit/shard_map) skip the check.
+    """
+    ref_leaves = jax.tree_util.tree_leaves(states[0])
+    for i, st in enumerate(states[1:], start=1):
+        for a, b in zip(ref_leaves, jax.tree_util.tree_leaves(st)):
+            if getattr(a, "dtype", None) == jnp.uint32 \
+                    and hashing.seeds_concretely_differ(a, b):
+                raise ValueError(
+                    f"tree_merge: shard 0 and shard {i} carry different "
+                    f"hash/transform seeds ({a!r} vs {b!r}); states built "
+                    f"from different seeds are not shards of one logical "
+                    f"stream and cannot be merged")
+
+
 def tree_merge(states: Sequence, merge_fn):
-    """Reduce a list of composable states pairwise: ceil(log2 D) rounds."""
+    """Reduce a list of composable states pairwise: ceil(log2 D) rounds.
+
+    Seed agreement across shards is validated up front (see
+    ``_check_shard_seeds``); the per-pair core merges re-check as they go.
+    """
     merge_fn = _resolve_merge(merge_fn)
     states = list(states)
     if not states:
         raise ValueError("tree_merge of no states")
+    _check_shard_seeds(states)
     while len(states) > 1:
         nxt = [merge_fn(states[i], states[i + 1])
                for i in range(0, len(states) - 1, 2)]

@@ -34,8 +34,9 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import countsketch, hashing, transforms, worp
+from repro.core import countsketch, hashing, transforms, tv_sampler, worp
 from repro.core import sampler as core_sampler
 from repro.core.perfect import Sample
 from repro.core.sampler import SamplerSpec
@@ -188,13 +189,12 @@ def onepass_update_dense(st: worp.OnePassState, values: jnp.ndarray,
     """Fast path: B dense segments through ONE batched pallas_call.
 
     ``values[b, i]`` is the frequency increment of key ``base_keys[b] + i``
-    for stream b (columns past ``lengths[b]`` ignored).  Only the PPSWOR
-    scheme is fused into the kernel.  The candidate refresh queries the
-    (C + n) per-stream keys through the batched estimate chokepoint --
-    one more batched dispatch instead of B vmapped gathers.
+    for stream b (columns past ``lengths[b]`` ignored).  Both bottom-k
+    schemes fuse into the kernel (the randomizer dispatch is static).  The
+    candidate refresh queries the (C + n) per-stream keys through the
+    batched estimate chokepoint -- one more batched dispatch instead of B
+    vmapped gathers.
     """
-    if scheme != transforms.PPSWOR:
-        raise ValueError("kernel fast path fuses the PPSWOR transform only")
     B, n = values.shape
     if base_keys is None:
         base_keys = jnp.zeros((B,), jnp.uint32)
@@ -205,29 +205,184 @@ def onepass_update_dense(st: worp.OnePassState, values: jnp.ndarray,
 
     delta = ops.sketch_dense_batch(
         values.astype(jnp.float32), st.sketch.table.shape[1],
-        st.sketch.table.shape[2], st.sketch.seed, p=p,
+        st.sketch.table.shape[2], st.sketch.seed, p=p, scheme=scheme,
         transform_seeds=st.seed_transform, base_keys=base_keys,
         lengths=lengths, interpret=interpret)
     sk = countsketch.CountSketch(table=st.sketch.table + delta,
                                  seed=st.sketch.seed)
-
-    # candidate refresh (same policy as worp.onepass_update): estimates of
-    # (old candidates U batch keys), all B streams in one batched query.
     offs = jnp.arange(n, dtype=jnp.int32)
     keys_dense = jnp.where(offs[None, :] < lengths[:, None],
                            base_keys[:, None].astype(jnp.int32) + offs[None, :],
                            _EMPTY)
-    all_keys = jnp.concatenate([st.cand_keys, keys_dense], axis=1)  # (B, C+n)
+    cand = _refresh_candidates(sk, st.cand_keys, keys_dense,
+                               use_kernel=use_kernel, interpret=interpret)
+    return worp.OnePassState(sketch=sk, cand_keys=cand,
+                             seed_transform=st.seed_transform)
+
+
+def _refresh_candidates(sk: countsketch.CountSketch, cand_keys, batch_keys,
+                        use_kernel=None, interpret=None):
+    """Batched candidate refresh (same policy as ``worp.onepass_update``):
+    estimates of (old candidates U batch keys) for all B streams through the
+    single batched query chokepoint -- one dispatch, not B vmapped gathers."""
+    all_keys = jnp.concatenate([cand_keys, batch_keys], axis=1)  # (B, C+n)
     est = jnp.abs(ops.estimate_batched(sk.table, all_keys, sk.seed,
                                        use_kernel=use_kernel,
                                        interpret=interpret))
     est = jnp.where(all_keys == _EMPTY, -jnp.inf, est)
-    cand = jax.vmap(
+    return jax.vmap(
         lambda ak, e: worp._dedup_topc(ak, jnp.zeros_like(e), e,
-                                       st.cand_keys.shape[1])[0]
+                                       cand_keys.shape[1])[0]
     )(all_keys, est)
+
+
+# ---------------------------------------------------------------------------
+# turnstile sparse data plane: signed (key, +-value) batches through the
+# batched Pallas scatter kernel (one pallas_call for all B streams)
+# ---------------------------------------------------------------------------
+
+# Sparse kernel paths by sampler name, mirroring the core sampler registry:
+# a new sketch-backed sampler opts into the scatter-kernel ingest plane with
+# ``@register_sparse_path("myname")`` (uniform signature
+# ``fn(state, keys, values, p, scheme, *, interpret, use_kernel)``) instead
+# of editing the engine; unregistered samplers fall back to the vmapped
+# spec update in ``ingest_sparse``.  ``register_frozen_sketch`` likewise
+# exposes the pass-II frozen CountSketch for the batched-priority path.
+_SPARSE_PATHS: dict = {}
+_FROZEN_SKETCH: dict = {}
+
+
+def register_sparse_path(name: str):
+    def deco(fn):
+        _SPARSE_PATHS[name] = fn
+        return fn
+
+    return deco
+
+
+def register_frozen_sketch(name: str):
+    def deco(fn):
+        _FROZEN_SKETCH[name] = fn
+        return fn
+
+    return deco
+
+
+register_frozen_sketch("onepass")(lambda st: st.sketch)
+register_frozen_sketch("twopass")(lambda st: st.pass1.sketch)
+
+
+@register_sparse_path("onepass")
+@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
+                                             "use_kernel"))
+def onepass_update_sparse(st: worp.OnePassState, keys: jnp.ndarray,
+                          values: jnp.ndarray, p: float,
+                          scheme: str = transforms.PPSWOR,
+                          interpret: Optional[bool] = None,
+                          use_kernel: Optional[bool] = None):
+    """Turnstile fast path: B sparse signed batches through ONE scatter
+    pallas_call (``kernels.countsketch_scatter_batched``).
+
+    ``(keys[b, i], values[b, i])`` is an arbitrary signed update of stream b
+    (negative values are deletions); ``keys == -1`` slots are padding.  The
+    candidate refresh then queries (C + n) per-stream keys through the
+    batched estimate chokepoint.  Semantically identical to the vmapped jnp
+    ``onepass_update`` with the same batch (padding slots carry value 0
+    there), up to fp reduction order.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    delta = ops.sketch_sparse_batch(
+        keys, values.astype(jnp.float32), st.sketch.table.shape[1],
+        st.sketch.table.shape[2], st.sketch.seed, p=p, scheme=scheme,
+        transform_seeds=st.seed_transform, interpret=interpret)
+    sk = countsketch.CountSketch(table=st.sketch.table + delta,
+                                 seed=st.sketch.seed)
+    cand = _refresh_candidates(sk, st.cand_keys, keys,
+                               use_kernel=use_kernel, interpret=interpret)
     return worp.OnePassState(sketch=sk, cand_keys=cand,
                              seed_transform=st.seed_transform)
+
+
+@jax.jit
+def twopass_update_from_priorities_batched(st2, keys, values, prio):
+    """vmapped ``worp.twopass_update_from_priorities``: one compiled call
+    updates all B pass-II buffers from precomputed (B, n) priorities."""
+    return jax.vmap(worp.twopass_update_from_priorities)(st2, keys, values,
+                                                         prio)
+
+
+@register_sparse_path("twopass")
+@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
+                                             "use_kernel"))
+def twopass_run_update_sparse(st, keys: jnp.ndarray, values: jnp.ndarray,
+                              p: float, scheme: str = transforms.PPSWOR,
+                              interpret: Optional[bool] = None,
+                              use_kernel: Optional[bool] = None):
+    """Sparse kernel path for the streaming "twopass" sampler state
+    (``core.sampler.TwoPassRunState``): pass I goes through the scatter
+    kernel; the pass-II buffer gets its online priorities from the batched
+    query chokepoint and updates via the vmapped from-priorities seam."""
+    keys = jnp.asarray(keys, jnp.int32)
+    p1 = onepass_update_sparse(st.pass1, keys, values, p, scheme,
+                               interpret=interpret, use_kernel=use_kernel)
+    prio = ops.estimate_batched(p1.sketch.table, keys, p1.sketch.seed,
+                                use_kernel=use_kernel, interpret=interpret)
+    p2 = twopass_update_from_priorities_batched(st.pass2, keys, values, prio)
+    return core_sampler.TwoPassRunState(pass1=p1, pass2=p2)
+
+
+@register_sparse_path("tv")
+@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
+                                             "use_kernel"))
+def tv_update_sparse(st, keys: jnp.ndarray, values: jnp.ndarray, p: float,
+                     scheme: str = transforms.PPSWOR,
+                     interpret: Optional[bool] = None,
+                     use_kernel: Optional[bool] = None):
+    """Sparse kernel path for the batched TV cascade: the B*r cascade
+    sketches (each with its own hash + transform seed) flatten into ONE
+    scatter pallas_call, their candidate refresh into one batched query
+    dispatch, and the rHH sketch rides the one-pass sparse path."""
+    keys = jnp.asarray(keys, jnp.int32)
+    values = values.astype(jnp.float32)
+    B, r = st.transform_seeds.shape
+    rows, width = st.sketches.table.shape[-2:]
+    C = st.cand_keys.shape[-1]
+
+    flat_seeds = st.sketches.seed.reshape(B * r)
+    flat_tseeds = st.transform_seeds.reshape(B * r)
+    keys_f = jnp.repeat(keys, r, axis=0)      # (B*r, n): stream b feeds all
+    vals_f = jnp.repeat(values, r, axis=0)    # r of its cascade samplers
+    delta = ops.sketch_sparse_batch(
+        keys_f, vals_f, rows, width, flat_seeds, p=p, scheme=scheme,
+        transform_seeds=flat_tseeds, interpret=interpret)
+    tables = st.sketches.table.reshape(B * r, rows, width) + delta
+    flat_sk = countsketch.CountSketch(table=tables, seed=flat_seeds)
+    cand = _refresh_candidates(flat_sk, st.cand_keys.reshape(B * r, C),
+                               keys_f, use_kernel=use_kernel,
+                               interpret=interpret)
+    return tv_sampler.TVSamplerState(
+        sketches=countsketch.CountSketch(
+            table=tables.reshape(B, r, rows, width), seed=st.sketches.seed),
+        cand_keys=cand.reshape(B, r, C),
+        transform_seeds=st.transform_seeds,
+        rhh=onepass_update_sparse(st.rhh, keys, values, p, scheme,
+                                  interpret=interpret,
+                                  use_kernel=use_kernel))
+
+
+def ingest_sparse(spec: SamplerSpec, state, keys, values,
+                  interpret: Optional[bool] = None,
+                  use_kernel: Optional[bool] = None):
+    """Route one batched sparse signed update through the sampler's kernel
+    path: every sketch-backed sampler (onepass, twopass pass-I/II, tv)
+    dispatches the batched Pallas scatter kernel via ``_SPARSE_PATHS``;
+    unregistered samplers (perfect: no sketch) fall back to the vmapped
+    spec update with identical semantics."""
+    path = _SPARSE_PATHS.get(spec.name)
+    if path is None:
+        return batched_ops(spec).update(state, keys, values)
+    return path(state, keys, values, spec.cfg.p, spec.cfg.scheme,
+                interpret=interpret, use_kernel=use_kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -302,9 +457,18 @@ class SketchEngine:
 
     Thin object shell over the functional batched ops above -- all state is
     jax pytrees, so an engine can live inside jit/scan via its ``.state``.
+
+    Turnstile ingest: ``ingest(keys, values)`` buffers sparse signed
+    microbatches host-side (numpy, zero device work) and ``flush()`` pushes
+    the whole buffer through ONE batched Pallas scatter dispatch per
+    sketch-backed sampler (``ingest_sparse``).  Buffers auto-flush when
+    they reach ``flush_elems`` per-stream elements and before any read or
+    state-mixing operation (sample/estimate/merge/freeze/collapse), so the
+    visible state is always up to date.
     """
 
-    def __init__(self, cfg: EngineConfig, sampler: Optional[str] = None):
+    def __init__(self, cfg: EngineConfig, sampler: Optional[str] = None,
+                 flush_elems: int = 4096):
         if sampler is not None and sampler != cfg.sampler:
             cfg = cfg._replace(sampler=sampler)
         self.cfg = cfg
@@ -312,6 +476,10 @@ class SketchEngine:
         self.ops = batched_ops(self.spec)
         self.state = self.ops.init(*derive_stream_seeds(cfg))
         self.pass2 = None
+        self.flush_elems = int(flush_elems)
+        self._buf_keys: list = []
+        self._buf_vals: list = []
+        self._buf_n = 0
 
     @property
     def num_streams(self) -> int:
@@ -324,7 +492,52 @@ class SketchEngine:
     # -- pass I -------------------------------------------------------------
     def update(self, keys, values):
         """Sparse element batches: keys/values (B, n) int32/float32."""
+        self.flush()
         self.state = self.ops.update(self.state, keys, values)
+        return self
+
+    def ingest(self, keys, values):
+        """Buffer a sparse signed (B, n) turnstile microbatch.
+
+        Negative values are deletions; ``keys == -1`` slots are padding.
+        Microbatches accumulate host-side and flush through ONE batched
+        scatter-kernel dispatch once ``flush_elems`` per-stream elements
+        are pending (or on the next read/flush).  Ingesting a batch and
+        later its negation returns the sketch exactly to zero (linearity).
+        """
+        keys = np.asarray(keys, np.int32)
+        values = np.asarray(values, np.float32)
+        if keys.shape != values.shape or keys.ndim != 2 \
+                or keys.shape[0] != self.cfg.num_streams:
+            raise ValueError(
+                f"ingest: keys/values must both be (num_streams={self.cfg.num_streams}, n), "
+                f"got {keys.shape} / {values.shape}")
+        self._buf_keys.append(keys)
+        self._buf_vals.append(values)
+        self._buf_n += keys.shape[1]
+        if self._buf_n >= self.flush_elems:
+            self.flush()
+        return self
+
+    @property
+    def pending(self) -> int:
+        """Per-stream element count currently buffered (not yet flushed)."""
+        return self._buf_n
+
+    def flush(self, interpret=None, use_kernel=None):
+        """Push all buffered turnstile microbatches through one batched
+        scatter-kernel dispatch (``ingest_sparse``); no-op when empty."""
+        if not self._buf_keys:
+            return self
+        keys = jnp.asarray(np.concatenate(self._buf_keys, axis=1))
+        vals = jnp.asarray(np.concatenate(self._buf_vals, axis=1))
+        self.state = ingest_sparse(self.spec, self.state, keys, vals,
+                                   interpret=interpret,
+                                   use_kernel=use_kernel)
+        # clear only after a successful dispatch: a failed flush (OOM,
+        # trace error) leaves the buffer intact for retry instead of
+        # silently dropping the microbatches
+        self._buf_keys, self._buf_vals, self._buf_n = [], [], 0
         return self
 
     def update_dense(self, values, base_keys=None, lengths=None,
@@ -336,9 +549,11 @@ class SketchEngine:
             raise ValueError(
                 f"update_dense: sampler {self.cfg.sampler!r} has no Pallas "
                 f"dense fast path (only 'onepass'); use update()")
+        self.flush()
         self.state = onepass_update_dense(self.state, values, self.cfg.p,
                                           base_keys=base_keys,
                                           lengths=lengths,
+                                          scheme=self.cfg.scheme,
                                           interpret=interpret)
         return self
 
@@ -355,6 +570,8 @@ class SketchEngine:
         if not isinstance(other, SketchEngine) or ocfg is None:
             raise TypeError(
                 f"merge_with expects a SketchEngine, got {type(other).__name__}")
+        self.flush()
+        other.flush()
         if ocfg != self.cfg:
             diff = [f"{f}={getattr(self.cfg, f)!r} vs {getattr(ocfg, f)!r}"
                     for f in self.cfg._fields
@@ -368,6 +585,7 @@ class SketchEngine:
         return self
 
     def sample(self, k: int) -> Sample:
+        self.flush()
         if self.cfg.sampler == "onepass":
             # batched query-kernel path (one dispatch for all B streams)
             return onepass_sample_batched(self.state, k, self.cfg.p,
@@ -376,6 +594,7 @@ class SketchEngine:
 
     def estimate(self, keys) -> jnp.ndarray:
         """Per-stream transformed-domain estimates for (B, n) keys."""
+        self.flush()
         if self.cfg.sampler == "onepass":
             return ops.estimate_batched(self.state.sketch.table, keys,
                                         self.state.sketch.seed)
@@ -388,12 +607,33 @@ class SketchEngine:
             raise ValueError(
                 f"freeze: sampler {self.cfg.sampler!r} has no exact second "
                 f"pass (two-phase samplers: onepass, twopass)")
+        self.flush()
         self.pass2 = self.ops.init2(self.state)
         return self
 
+    def _frozen_sketch(self):
+        """The batched frozen pass-I CountSketch backing pass-II priorities
+        (None for samplers that registered no ``register_frozen_sketch``
+        accessor)."""
+        getter = _FROZEN_SKETCH.get(self.cfg.sampler)
+        return getter(self.state) if getter is not None else None
+
     def update_pass2(self, keys, values):
+        """Exact-frequency pass-II replay; priorities against the FROZEN
+        pass-I sketch come from the batched query chokepoint (one dispatch
+        for all B streams) when the sampler exposes its sketch."""
         assert self.pass2 is not None, "call freeze() before pass II"
-        self.pass2 = self.ops.update2(self.pass2, self.state, keys, values)
+        frozen = self._frozen_sketch()
+        if frozen is not None:
+            prio = ops.estimate_batched(frozen.table,
+                                        jnp.asarray(keys, jnp.int32),
+                                        frozen.seed)
+            self.pass2 = twopass_update_from_priorities_batched(
+                self.pass2, jnp.asarray(keys, jnp.int32),
+                jnp.asarray(values, jnp.float32), prio)
+        else:
+            self.pass2 = self.ops.update2(self.pass2, self.state, keys,
+                                          values)
         return self
 
     def sample_exact(self, k: int) -> Sample:
@@ -406,4 +646,5 @@ class SketchEngine:
         if not self.cfg.shared_seeds:
             raise ValueError("collapse() requires shared_seeds=True "
                              "(independent streams are not mergeable)")
+        self.flush()
         return reduce_streams(self.state, self.ops.merge)

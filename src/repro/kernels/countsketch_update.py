@@ -8,7 +8,9 @@ TPUs have no atomics, so the scatter is restructured as a ONE-HOT MATMUL:
 
     for each value block  v  (1, B)  streamed HBM -> VMEM:
         keys    = base + global offsets           (VPU iota)
-        r_x     = Exp[1](hash(key))               (VPU, fused transform Eq. 5)
+        r_x     = D[hash(key)]                    (VPU, fused transform Eq. 5;
+                                                   D = Exp[1] ppswor / U(0,1]
+                                                   priority per static scheme)
         for each sketch row r:
             bucket_r = hash_r(key) mod W          (VPU multiply-shift)
             onehot   = (bucket_r == col_ids)      (B, WB)  in VREGs
@@ -40,11 +42,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import hashing
+from repro.core import hashing, transforms
 
 
 def _kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
-            block_n: int, block_w: int, p: float | None):
+            block_n: int, block_w: int, p: float | None, scheme: str):
     j = pl.program_id(0)  # width block
     i = pl.program_id(1)  # value block
 
@@ -63,8 +65,10 @@ def _kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
     keys = base + offs.astype(jnp.uint32)
 
     if p is not None:
-        # Fused bottom-k transform (Eq. 5): v -> v / r_x^{1/p}, r_x ~ Exp[1].
-        r_x = hashing.exp1(keys, tseed)
+        # Fused bottom-k transform (Eq. 5): v -> v / r_x^{1/p}; the scheme
+        # dispatch is static, so ppswor (Exp[1]) and priority (U(0,1])
+        # randomizers both trace into the kernel as pure VPU ops.
+        r_x = transforms.randomizer(keys, tseed, scheme)
         vals = vals * r_x ** jnp.float32(-1.0 / p)
     vals = jnp.where(valid, vals, 0.0)
 
@@ -94,7 +98,8 @@ def _pad_to(x: int, m: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("rows", "width", "p", "block_n", "block_w", "interpret"),
+    static_argnames=("rows", "width", "p", "scheme", "block_n", "block_w",
+                     "interpret"),
 )
 def countsketch_update(
     values: jnp.ndarray,
@@ -102,6 +107,7 @@ def countsketch_update(
     width: int,
     seed,
     p: float | None = None,
+    scheme: str = transforms.PPSWOR,
     transform_seed=0,
     base_key=0,
     block_n: int = 1024,
@@ -111,9 +117,9 @@ def countsketch_update(
     """Sketch a dense vector segment; returns the (rows, width) table.
 
     ``values[i]`` is the frequency of key ``base_key + i``.  With ``p`` set,
-    the p-ppswor transform is fused (gradient-compression hot path).
-    ``interpret=True`` runs the kernel body on CPU (this container); on real
-    TPU pass ``interpret=False``.
+    the bottom-k transform of ``scheme`` is fused (gradient-compression hot
+    path).  ``interpret=True`` runs the kernel body on CPU (this container);
+    on real TPU pass ``interpret=False``.
     """
     n = values.shape[0]
     block_w = min(block_w, _pad_to(width, 128))
@@ -131,7 +137,7 @@ def countsketch_update(
     grid = (w_pad // block_w, n_pad // block_n)
     table = pl.pallas_call(
         functools.partial(_kernel, rows=rows, width=width, block_n=block_n,
-                          block_w=block_w, p=p),
+                          block_w=block_w, p=p, scheme=scheme),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
@@ -149,13 +155,41 @@ def countsketch_update(
 # batched multi-stream kernel (SketchEngine fast path)
 # ---------------------------------------------------------------------------
 
-# meta table layout, one row per stream (padded to a 128-lane tile):
+# meta table layout, one row per stream (padded to a 128-lane tile) --
+# SHARED with the scatter kernel (countsketch_scatter.py imports these, so
+# the layout is defined exactly once):
 _META_SEED, _META_TSEED, _META_BASE, _META_N = 0, 1, 2, 3
 _META_COLS = 128
 
 
+def _broadcast_stream_params(B, n, seeds, transform_seeds, lengths):
+    """Per-stream (B,) seed/transform-seed/length vectors from scalars or
+    partial inputs (the common prologue of every batched kernel wrapper)."""
+    seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32), (B,))
+    if transform_seeds is None:
+        transform_seeds = jnp.zeros((B,), jnp.uint32)
+    transform_seeds = jnp.broadcast_to(
+        jnp.asarray(transform_seeds, jnp.uint32), (B,))
+    if lengths is None:
+        lengths = jnp.full((B,), n, jnp.int32)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    return seeds, transform_seeds, lengths
+
+
+def _stream_meta(b_pad, seeds, transform_seeds, lengths, base_keys=None):
+    """(b_pad, _META_COLS) scalar-prefetch meta table, one row per stream;
+    padded streams keep length 0 and contribute nothing."""
+    B = seeds.shape[0]
+    meta = jnp.zeros((b_pad, _META_COLS), jnp.int32)
+    meta = meta.at[:B, _META_SEED].set(seeds.astype(jnp.int32))
+    meta = meta.at[:B, _META_TSEED].set(transform_seeds.astype(jnp.int32))
+    if base_keys is not None:
+        meta = meta.at[:B, _META_BASE].set(base_keys.astype(jnp.int32))
+    return meta.at[:B, _META_N].set(lengths)
+
+
 def _batched_kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
-                    block_n: int, block_w: int, p: float | None):
+                    block_n: int, block_w: int, p: float | None, scheme: str):
     # grid = (batch_blocks, width_blocks, n_blocks); n innermost so each
     # (stream-block, width-block) table tile accumulates over the stream.
     j = pl.program_id(1)  # width block
@@ -177,7 +211,8 @@ def _batched_kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
     keys = base + offs.astype(jnp.uint32)     # (B, N) per-stream key spaces
 
     if p is not None:
-        r_x = hashing.exp1(keys, tseed)       # per-stream transform seeds
+        # per-stream transform seeds; scheme dispatch is static (see _kernel)
+        r_x = transforms.randomizer(keys, tseed, scheme)
         vals = vals * r_x ** jnp.float32(-1.0 / p)
     vals = jnp.where(valid, vals, 0.0)
 
@@ -203,8 +238,8 @@ def _batched_kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("rows", "width", "p", "block_n", "block_w", "block_b",
-                     "interpret"),
+    static_argnames=("rows", "width", "p", "scheme", "block_n", "block_w",
+                     "block_b", "interpret"),
 )
 def countsketch_update_batched(
     values: jnp.ndarray,
@@ -212,6 +247,7 @@ def countsketch_update_batched(
     width: int,
     seeds: jnp.ndarray,
     p: float | None = None,
+    scheme: str = transforms.PPSWOR,
     transform_seeds=None,
     base_keys=None,
     lengths=None,
@@ -229,17 +265,11 @@ def countsketch_update_batched(
     stay statistically independent unless deliberately seeded equal.
     """
     B, n = values.shape
-    seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32), (B,))
-    if transform_seeds is None:
-        transform_seeds = jnp.zeros((B,), jnp.uint32)
-    transform_seeds = jnp.broadcast_to(
-        jnp.asarray(transform_seeds, jnp.uint32), (B,))
+    seeds, transform_seeds, lengths = _broadcast_stream_params(
+        B, n, seeds, transform_seeds, lengths)
     if base_keys is None:
         base_keys = jnp.zeros((B,), jnp.uint32)
     base_keys = jnp.broadcast_to(jnp.asarray(base_keys, jnp.uint32), (B,))
-    if lengths is None:
-        lengths = jnp.full((B,), n, jnp.int32)
-    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
 
     block_w = min(block_w, _pad_to(width, 128))
     block_n = min(block_n, _pad_to(n, 128))
@@ -249,17 +279,14 @@ def countsketch_update_batched(
     b_pad = _pad_to(B, block_b)
 
     vals = jnp.pad(values, ((0, b_pad - B), (0, n_pad - n)))
-    meta = jnp.zeros((b_pad, _META_COLS), jnp.int32)
-    meta = meta.at[:B, _META_SEED].set(seeds.astype(jnp.int32))
-    meta = meta.at[:B, _META_TSEED].set(transform_seeds.astype(jnp.int32))
-    meta = meta.at[:B, _META_BASE].set(base_keys.astype(jnp.int32))
-    # padded streams get length 0 => contribute nothing
-    meta = meta.at[:B, _META_N].set(lengths)
+    meta = _stream_meta(b_pad, seeds, transform_seeds, lengths,
+                        base_keys=base_keys)
 
     grid = (b_pad // block_b, w_pad // block_w, n_pad // block_n)
     table = pl.pallas_call(
         functools.partial(_batched_kernel, rows=rows, width=width,
-                          block_n=block_n, block_w=block_w, p=p),
+                          block_n=block_n, block_w=block_w, p=p,
+                          scheme=scheme),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, _META_COLS), lambda b, j, i: (b, 0)),

@@ -14,6 +14,10 @@ from .countsketch_update import (
     countsketch_update as _update,
     countsketch_update_batched as _update_batched,
 )
+from .countsketch_scatter import (
+    countsketch_scatter as _scatter,
+    countsketch_scatter_batched as _scatter_batched,
+)
 from . import ref
 from .countsketch_query import (
     countsketch_query as _query,
@@ -28,27 +32,52 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def sketch_dense_vector(values, rows, width, seed, p=None, transform_seed=0,
-                        base_key=0, interpret=None, **kw):
+def sketch_dense_vector(values, rows, width, seed, p=None, scheme="ppswor",
+                        transform_seed=0, base_key=0, interpret=None, **kw):
     """CountSketch of a dense vector segment (fused transform when p given)."""
     if interpret is None:
         interpret = _default_interpret()
-    return _update(values, rows, width, seed, p=p,
+    return _update(values, rows, width, seed, p=p, scheme=scheme,
                    transform_seed=transform_seed, base_key=base_key,
                    interpret=interpret, **kw)
 
 
-def sketch_dense_batch(values, rows, width, seeds, p=None,
+def sketch_dense_batch(values, rows, width, seeds, p=None, scheme="ppswor",
                        transform_seeds=None, base_keys=None, lengths=None,
                        interpret=None, **kw):
     """CountSketch B dense segments in one batched pallas_call -> (B, rows,
     width).  The SketchEngine fast path; see countsketch_update_batched."""
     if interpret is None:
         interpret = _default_interpret()
-    return _update_batched(values, rows, width, seeds, p=p,
+    return _update_batched(values, rows, width, seeds, p=p, scheme=scheme,
                            transform_seeds=transform_seeds,
                            base_keys=base_keys, lengths=lengths,
                            interpret=interpret, **kw)
+
+
+def sketch_sparse_vector(keys, values, rows, width, seed, p=None,
+                         scheme="ppswor", transform_seed=0, interpret=None,
+                         **kw):
+    """Turnstile scatter of one sparse signed (key, value) batch ->
+    (rows, width); see countsketch_scatter."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _scatter(keys, values, rows, width, seed, p=p, scheme=scheme,
+                    transform_seed=transform_seed, interpret=interpret, **kw)
+
+
+def sketch_sparse_batch(keys, values, rows, width, seeds, p=None,
+                        scheme="ppswor", transform_seeds=None, lengths=None,
+                        interpret=None, **kw):
+    """Turnstile scatter of B sparse signed streams in ONE batched
+    pallas_call -> (B, rows, width).  The SketchEngine sparse-ingest fast
+    path; signed values are deletions, keys == -1 are padding, and ragged
+    streams mask via ``lengths``.  See countsketch_scatter_batched."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _scatter_batched(keys, values, rows, width, seeds, p=p,
+                            scheme=scheme, transform_seeds=transform_seeds,
+                            lengths=lengths, interpret=interpret, **kw)
 
 
 def query_rows(table, keys, seed, interpret=None, **kw):

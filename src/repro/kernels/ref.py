@@ -10,13 +10,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import hashing
+from repro.core import hashing, transforms
 
 
 def ppswor_transform_ref(keys: jnp.ndarray, values: jnp.ndarray, p: float,
-                         seed) -> jnp.ndarray:
-    """Oracle for the fused hash -> Exp[1] -> scale transform (Eq. 5)."""
-    r = hashing.exp1(keys, seed)
+                         seed, scheme: str = transforms.PPSWOR) -> jnp.ndarray:
+    """Oracle for the fused hash -> randomizer -> scale transform (Eq. 5);
+    ``scheme`` picks the bottom-k randomizer (ppswor Exp[1] / priority
+    U(0,1])."""
+    r = transforms.randomizer(keys, seed, scheme)
     return values * r.astype(values.dtype) ** jnp.asarray(-1.0 / p,
                                                           values.dtype)
 
@@ -29,18 +31,19 @@ def countsketch_update_ref(
     seed,
     p: float | None = None,
     transform_seed=None,
+    scheme: str = transforms.PPSWOR,
 ) -> jnp.ndarray:
     """Oracle CountSketch table of a dense vector segment.
 
-    If ``p`` is given, the p-ppswor transform is fused (the gradient
-    compression hot path); otherwise raw values are sketched.
+    If ``p`` is given, the bottom-k transform of ``scheme`` is fused (the
+    gradient compression hot path); otherwise raw values are sketched.
     Returns (rows, width) float32.
     """
     n = values.shape[0]
     keys = jnp.asarray(base_key, jnp.uint32) + jnp.arange(n, dtype=jnp.uint32)
     vals = values.astype(jnp.float32)
     if p is not None:
-        vals = ppswor_transform_ref(keys, vals, p, transform_seed)
+        vals = ppswor_transform_ref(keys, vals, p, transform_seed, scheme)
 
     def one_row(r):
         salt = hashing.row_salt(seed, r)
@@ -49,6 +52,72 @@ def countsketch_update_ref(
         return jax.ops.segment_sum(s * vals, b, num_segments=width)
 
     return jax.vmap(one_row)(jnp.arange(rows, dtype=jnp.uint32))
+
+
+def countsketch_scatter_ref(
+    keys: jnp.ndarray,    # (n,) int32 arbitrary keys; -1 = padding
+    values: jnp.ndarray,  # (n,) signed float values (turnstile)
+    rows: int,
+    width: int,
+    seed,
+    p: float | None = None,
+    transform_seed=None,
+    scheme: str = transforms.PPSWOR,
+) -> jnp.ndarray:
+    """Oracle turnstile scatter: sketch an arbitrary (key, +-value) batch.
+
+    Padding slots (``keys == -1``) contribute nothing; duplicate keys
+    accumulate (linearity), so an insert followed by the matching deletion
+    cancels exactly.  Returns (rows, width) float32.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    valid = keys != jnp.int32(-1)
+    ukeys = keys.astype(jnp.uint32)
+    vals = values.astype(jnp.float32)
+    if p is not None:
+        vals = ppswor_transform_ref(ukeys, vals, p, transform_seed, scheme)
+    vals = jnp.where(valid, vals, 0.0)
+
+    def one_row(r):
+        salt = hashing.row_salt(seed, r)
+        b = hashing.bucket_hash(ukeys, salt, width)
+        s = hashing.sign_hash(ukeys, salt)
+        return jax.ops.segment_sum(s * vals, b, num_segments=width)
+
+    return jax.vmap(one_row)(jnp.arange(rows, dtype=jnp.uint32))
+
+
+def countsketch_scatter_batched_ref(
+    keys: jnp.ndarray,    # (B, n) int32
+    values: jnp.ndarray,  # (B, n) signed float
+    rows: int,
+    width: int,
+    seeds,
+    p: float | None = None,
+    transform_seeds=None,
+    lengths=None,
+    scheme: str = transforms.PPSWOR,
+) -> jnp.ndarray:
+    """Oracle for the batched scatter kernel: (B, rows, width) per-stream
+    tables from ragged signed (key, value) batches."""
+    B, n = keys.shape
+    seeds = jnp.broadcast_to(jnp.asarray(seeds, jnp.uint32), (B,))
+    if transform_seeds is None:
+        transform_seeds = jnp.zeros((B,), jnp.uint32)
+    transform_seeds = jnp.broadcast_to(
+        jnp.asarray(transform_seeds, jnp.uint32), (B,))
+    if lengths is None:
+        lengths = jnp.full((B,), n, jnp.int32)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    # positions past lengths[b] become padding keys (-1)
+    keys = jnp.where(jnp.arange(n)[None, :] < lengths[:, None],
+                     jnp.asarray(keys, jnp.int32), jnp.int32(-1))
+
+    def one_stream(k, v, s, ts):
+        return countsketch_scatter_ref(k, v, rows, width, s, p=p,
+                                       transform_seed=ts, scheme=scheme)
+
+    return jax.vmap(one_stream)(keys, values, seeds, transform_seeds)
 
 
 def countsketch_query_ref(

@@ -10,6 +10,13 @@ across serving replicas) -- and the per-request top tokens print at the end.
 ``--sampler`` picks ANY sampler from the registry (onepass, twopass,
 perfect, tv): the engine is sampler-generic, so serving analytics swap
 samplers without code changes.
+
+Token updates flow through the engine's TURNSTILE ingest plane
+(``engine.ingest``): microbatches buffer host-side and flush through one
+batched Pallas scatter dispatch.  ``--worp-window W`` keeps the analytics
+over a sliding window of the last W decode steps by RETRACTING (value -1
+deletions) tokens as they age out -- the signed-update workload the paper's
+turnstile model exists for.
 """
 import argparse
 
@@ -35,6 +42,11 @@ def main():
                     help="track per-request token streams in a batched "
                          "SketchEngine and report the top-K WOR sample")
     ap.add_argument("--worp-p", type=float, default=1.0)
+    ap.add_argument("--worp-window", type=int, default=0,
+                    help="sliding window: only the last W decode steps count "
+                         "toward the token analytics; older tokens are "
+                         "retracted via turnstile deletions (0 = unbounded, "
+                         "prompt included)")
     ap.add_argument("--sampler", default="onepass",
                     choices=core_sampler.available(),
                     help="registered sampler backing the token analytics "
@@ -44,6 +56,8 @@ def main():
         ap.error("--worp-topk must be >= 0")
     if args.worp_topk and args.worp_p <= 0:
         ap.error("--worp-p must be > 0 (samples by |freq|^p)")
+    if args.worp_window < 0:
+        ap.error("--worp-window must be >= 0")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -74,16 +88,22 @@ def main():
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     pos0 = S + (cfg.num_patches if cfg.family == "vlm" else 0)
     engine = None
+    window: list = []  # decode-step token batches still inside the window
     if args.worp_topk:
-        # one engine stream per request; prompt tokens seed the streams
+        # one engine stream per request; token updates buffer host-side and
+        # flush through one batched scatter-kernel dispatch (turnstile plane)
         engine = SketchEngine(EngineConfig(
             num_streams=B, rows=5, width=max(256, 31 * args.worp_topk),
             candidates=4 * args.worp_topk, p=args.worp_p, seed=0x5EED,
             sampler=args.sampler, domain=cfg.vocab_size,
             num_samplers=max(4, args.worp_topk)))
-        engine.update(batch["tokens"],
-                      jnp.ones_like(batch["tokens"], jnp.float32))
-        engine.update(tok, jnp.ones_like(tok, jnp.float32))
+        if not args.worp_window:
+            # unbounded analytics include the prompt; windowed are decode-only
+            engine.ingest(batch["tokens"],
+                          np.ones(batch["tokens"].shape, np.float32))
+        engine.ingest(tok, np.ones(tok.shape, np.float32))
+        if args.worp_window:
+            window.append(np.asarray(tok))
     outs = [np.asarray(tok)]
     for i in range(args.tokens):
         lg, cache = step(params, {"token": tok, "pos": jnp.int32(pos0 + i),
@@ -91,14 +111,22 @@ def main():
         tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         outs.append(np.asarray(tok))
         if engine is not None:
-            engine.update(tok, jnp.ones_like(tok, jnp.float32))
+            engine.ingest(tok, np.ones(tok.shape, np.float32))
+            if args.worp_window:
+                window.append(np.asarray(tok))
+                if len(window) > args.worp_window:
+                    # retraction: the aged-out step leaves the sliding window
+                    old = window.pop(0)
+                    engine.ingest(old, -np.ones(old.shape, np.float32))
     print("generated ids:")
     for row in np.concatenate(outs, axis=1):
         print(" ", row.tolist())
     if engine is not None:
-        sample = engine.sample(args.worp_topk)
+        sample = engine.sample(args.worp_topk)  # flushes pending ingests
         keys, freqs = np.asarray(sample.keys), np.asarray(sample.freqs)
-        print(f"per-request top-{args.worp_topk} tokens "
+        scope = (f"last {args.worp_window} decode steps" if args.worp_window
+                 else "prompt + decode")
+        print(f"per-request top-{args.worp_topk} tokens over {scope} "
               f"(WOR ell_{args.worp_p} sample):")
         for b in range(B):
             pairs = [f"{int(t)}:{f:.0f}" for t, f in zip(keys[b], freqs[b])

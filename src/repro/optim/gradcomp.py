@@ -275,9 +275,6 @@ def tree_compress_step_engine(grads, error, cc: CompressorConfig,
     """
     import numpy as np
 
-    if cc.scheme != transforms.PPSWOR:
-        raise ValueError("tree_compress_step_engine: the fused dense kernel "
-                         "supports the ppswor scheme only")
     leaves_g = jax.tree_util.tree_leaves(grads)
     leaves_e = jax.tree_util.tree_leaves(error)
     sizes = [int(np.prod(l.shape)) for l in leaves_g]
@@ -293,7 +290,7 @@ def tree_compress_step_engine(grads, error, cc: CompressorConfig,
 
     # 1. batched sketch of all layers in one kernel dispatch
     tables = kernel_ops.sketch_dense_batch(
-        a_pad, cc.rows, cc.width, sk_seeds, p=cc.p,
+        a_pad, cc.rows, cc.width, sk_seeds, p=cc.p, scheme=cc.scheme,
         transform_seeds=t_seeds, lengths=lengths)               # (L, R, W)
     tables = jax.lax.psum(tables, axis_names)                   # merge shards
 

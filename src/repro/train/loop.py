@@ -91,8 +91,11 @@ def run_training(
         watchdog.step_end(step)
         losses.append(loss)
         if analytics is not None:
-            toks = b["tokens"].reshape(1, -1).astype(jnp.int32)
-            analytics.update(toks, jnp.ones_like(toks, jnp.float32))
+            # turnstile ingest plane: per-step token batches buffer host-side
+            # and flush through one batched scatter-kernel dispatch (the
+            # final sample() flushes any tail)
+            toks = np.asarray(b["tokens"], np.int32).reshape(1, -1)
+            analytics.ingest(toks, np.ones_like(toks, np.float32))
         if step % log_every == 0:
             print_fn(f"step {step:5d}  loss {loss:.4f}")
         if ckpt_dir and (step + 1) % ckpt_every == 0:

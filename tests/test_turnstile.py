@@ -1,0 +1,440 @@
+"""Turnstile sparse-update contracts (ISSUE 3).
+
+Three layers of guarantees:
+  * kernel: the batched Pallas scatter kernel is bit-exact (fp32, up to
+    reduction order) vs the ref.py oracle for ragged SIGNED streams;
+  * engine: insert-then-delete streams return the sketch to zero, and a
+    mixed insert/delete ingest produces the same sample as the equivalent
+    pre-aggregated stream -- for EVERY registered sampler, both schemes;
+  * merge safety: merging shards with different transform/hash seeds fails
+    loudly instead of silently producing garbage.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.core import countsketch, transforms, worp
+from repro.core import sampler as core_sampler
+from repro.data import pipeline
+from repro.distributed import sharding as shd
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 3
+SCHEMES = [transforms.PPSWOR, transforms.PRIORITY]
+
+
+def _cfg(name, scheme=transforms.PPSWOR, **kw):
+    base = dict(num_streams=B, rows=3, width=128, candidates=64, capacity=64,
+                p=1.0, scheme=scheme, seed=11, sampler=name, domain=40,
+                num_samplers=3)
+    base.update(kw)
+    return E.EngineConfig(**base)
+
+
+def _sparse(seed=0, n=60, domain=40):
+    """Keys over a small domain (so the candidate buffer covers them all)
+    with well-separated positive frequencies."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, domain, (B, n)).astype(np.int32)
+    vals = (rng.random((B, n)).astype(np.float32) + 0.5) \
+        * (1 + (keys % 7 == 0) * 20)
+    return keys, vals
+
+
+class TestScatterKernel:
+    """countsketch_scatter_batched vs the ref.py oracle."""
+
+    @pytest.mark.parametrize("n", [1, 127, 500, 1500])
+    @pytest.mark.parametrize("width", [64, 333])
+    def test_shape_sweep_signed(self, n, width):
+        rng = np.random.default_rng(n + width)
+        keys = jnp.asarray(rng.integers(0, 50_000, (B, n)), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=(B, n)).astype(np.float32))
+        seeds = jnp.arange(1, B + 1, dtype=jnp.uint32)
+        out = ops.sketch_sparse_batch(keys, vals, 3, width, seeds)
+        want = ref.countsketch_scatter_batched_ref(keys, vals, 3, width,
+                                                   seeds)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    @pytest.mark.parametrize("p", [0.5, 1.0, 2.0])
+    def test_fused_transform_schemes(self, p, scheme):
+        rng = np.random.default_rng(int(p * 10))
+        keys = jnp.asarray(rng.integers(0, 10_000, (B, 400)), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=(B, 400)).astype(np.float32))
+        seeds = jnp.arange(1, B + 1, dtype=jnp.uint32)
+        tseeds = seeds + 77
+        out = ops.sketch_sparse_batch(keys, vals, 3, 256, seeds, p=p,
+                                      scheme=scheme, transform_seeds=tseeds)
+        want = ref.countsketch_scatter_batched_ref(
+            keys, vals, 3, 256, seeds, p=p, transform_seeds=tseeds,
+            scheme=scheme)
+        w = np.asarray(want)
+        np.testing.assert_allclose(np.asarray(out), w, rtol=1e-4,
+                                   atol=1e-5 * max(1.0, np.abs(w).max()))
+
+    def test_ragged_lengths_and_padding_keys(self):
+        rng = np.random.default_rng(3)
+        keys = rng.integers(0, 9999, (B, 300)).astype(np.int32)
+        keys[0, 10:20] = -1  # explicit padding slots mid-stream
+        vals = rng.normal(size=(B, 300)).astype(np.float32)
+        lengths = jnp.asarray([300, 37, 0], jnp.int32)
+        seeds = jnp.uint32(5)
+        out = ops.sketch_sparse_batch(jnp.asarray(keys), jnp.asarray(vals),
+                                      3, 128, seeds, lengths=lengths)
+        want = ref.countsketch_scatter_batched_ref(
+            jnp.asarray(keys), jnp.asarray(vals), 3, 128, seeds,
+            lengths=lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+        # a zero-length stream contributes an all-zero table
+        assert np.all(np.asarray(out[2]) == 0.0)
+
+    def test_duplicate_keys_accumulate(self):
+        """The one-hot-matmul scatter must sum duplicates (no atomics)."""
+        keys = jnp.asarray(np.full((1, 64), 7, np.int32))
+        vals = jnp.asarray(np.ones((1, 64), np.float32))
+        out = ops.sketch_sparse_batch(keys, vals, 3, 64, jnp.uint32(1))
+        one = ops.sketch_sparse_batch(keys[:, :1], vals[:, :1], 3, 64,
+                                      jnp.uint32(1))
+        np.testing.assert_allclose(np.asarray(out), 64.0 * np.asarray(one),
+                                   rtol=1e-6)
+
+    def test_insert_then_delete_zeroes_table(self):
+        rng = np.random.default_rng(4)
+        keys = jnp.asarray(rng.integers(0, 5000, (B, 200)), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=(B, 200)).astype(np.float32))
+        seeds = jnp.arange(B, dtype=jnp.uint32)
+        a = ops.sketch_sparse_batch(keys, vals, 3, 128, seeds, p=1.0)
+        b = ops.sketch_sparse_batch(keys, -vals, 3, 128, seeds, p=1.0)
+        np.testing.assert_allclose(np.asarray(a + b), 0.0, atol=1e-3)
+
+    def test_single_stream_wrapper(self):
+        rng = np.random.default_rng(5)
+        keys = jnp.asarray(rng.integers(0, 999, 150), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=150).astype(np.float32))
+        out = ops.sketch_sparse_vector(keys, vals, 3, 128, seed=9, p=1.0,
+                                       transform_seed=4)
+        want = ref.countsketch_scatter_ref(keys, vals, 3, 128, seed=9,
+                                           p=1.0, transform_seed=4)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_scatter_matches_core_library(self):
+        """Scatter kernel == repro.core.countsketch.update on the same
+        element batch, so the sampler stack can swap them freely."""
+        rng = np.random.default_rng(6)
+        keys = jnp.asarray(rng.integers(0, 2000, 500), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=500).astype(np.float32))
+        t = ops.sketch_sparse_vector(keys, vals, 3, 256, seed=13)
+        sk = countsketch.update(countsketch.init(3, 256, 13), keys, vals)
+        np.testing.assert_allclose(np.asarray(t), np.asarray(sk.table),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestEngineTurnstileContract:
+    """SketchEngine.ingest over EVERY registered sampler, both schemes."""
+
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    @pytest.mark.parametrize("name", core_sampler.available())
+    def test_mixed_stream_matches_aggregated(self, name, scheme):
+        """insert X, insert junk, insert Y, delete junk  ==  insert X+Y."""
+        cfg = _cfg(name, scheme)
+        keys, vals = _sparse(seed=1)
+        rng = np.random.default_rng(2)
+        junk_k = rng.integers(0, 40, (B, 20)).astype(np.int32)
+        junk_v = rng.normal(size=(B, 20)).astype(np.float32)
+
+        eng = E.SketchEngine(cfg, flush_elems=50)  # forces mid-stream flush
+        eng.ingest(keys[:, :30], vals[:, :30])
+        eng.ingest(junk_k, junk_v)
+        eng.ingest(keys[:, 30:], vals[:, 30:])
+        eng.ingest(junk_k, -junk_v)
+        s1 = eng.sample(4)
+
+        agg = E.SketchEngine(cfg)
+        agg.ingest(keys, vals)
+        s2 = agg.sample(4)
+        assert np.array_equal(np.asarray(s1.keys), np.asarray(s2.keys)), name
+        np.testing.assert_allclose(np.asarray(s1.freqs),
+                                   np.asarray(s2.freqs), rtol=1e-3,
+                                   atol=1e-3)
+
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    @pytest.mark.parametrize("name", core_sampler.available())
+    def test_ingest_matches_vmapped_update(self, name, scheme):
+        """The kernel ingest path == the vmapped jnp spec update (samples
+        agree; sketch tables to reduction-order tolerance)."""
+        cfg = _cfg(name, scheme)
+        keys, vals = _sparse(seed=7)
+        a = E.SketchEngine(cfg)
+        a.ingest(keys, vals)
+        s1 = a.sample(4)
+        b = E.SketchEngine(cfg)
+        b.update(jnp.asarray(keys), jnp.asarray(vals))
+        s2 = b.sample(4)
+        assert np.array_equal(np.asarray(s1.keys), np.asarray(s2.keys)), name
+        np.testing.assert_allclose(np.asarray(s1.freqs),
+                                   np.asarray(s2.freqs), rtol=1e-3,
+                                   atol=1e-3)
+
+    @pytest.mark.parametrize("name", ["onepass", "twopass", "tv"])
+    def test_insert_then_delete_returns_sketch_to_zero(self, name):
+        """Every sketch table in the state returns (numerically) to zero
+        after ingesting a stream and then its negation -- linearity."""
+        cfg = _cfg(name)
+        keys, vals = _sparse(seed=3)
+        eng = E.SketchEngine(cfg)
+        eng.ingest(keys, vals)
+        eng.ingest(keys, -vals)
+        eng.flush()
+        if name == "onepass":
+            tables = [eng.state.sketch.table]
+        elif name == "twopass":
+            tables = [eng.state.pass1.sketch.table]
+        else:
+            tables = [eng.state.sketches.table, eng.state.rhh.sketch.table]
+        for t in tables:
+            np.testing.assert_allclose(np.asarray(t), 0.0, atol=1e-3)
+
+    def test_pass2_ingest_chokepoint_exact(self):
+        """update_pass2 priorities through the batched query chokepoint
+        still yield exact pass-II frequencies."""
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=9)
+        vals = np.abs(vals)
+        eng = E.SketchEngine(cfg)
+        eng.ingest(keys, vals)
+        eng.freeze()
+        eng.update_pass2(keys, vals)
+        s = eng.sample_exact(4)
+        for b in range(B):
+            agg = {}
+            for k, v in zip(keys[b], vals[b]):
+                agg[int(k)] = agg.get(int(k), 0.0) + float(v)
+            for k, f in zip(np.asarray(s.keys[b]), np.asarray(s.freqs[b])):
+                assert f == pytest.approx(agg[int(k)], rel=1e-4)
+
+
+class TestIngestBuffer:
+    def test_microbatches_buffer_then_flush(self):
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=4)
+        eng = E.SketchEngine(cfg, flush_elems=10_000)
+        eng.ingest(keys[:, :20], vals[:, :20])
+        eng.ingest(keys[:, 20:], vals[:, 20:])
+        assert eng.pending == keys.shape[1]  # nothing dispatched yet
+        assert np.all(np.asarray(eng.state.sketch.table) == 0.0)
+        eng.flush()
+        assert eng.pending == 0
+        ref_eng = E.SketchEngine(cfg)
+        ref_eng.ingest(keys, vals)
+        ref_eng.flush()
+        np.testing.assert_allclose(np.asarray(eng.state.sketch.table),
+                                   np.asarray(ref_eng.state.sketch.table),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_flush_threshold_triggers(self):
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=5)
+        eng = E.SketchEngine(cfg, flush_elems=30)
+        eng.ingest(keys[:, :20], vals[:, :20])
+        assert eng.pending == 20
+        eng.ingest(keys[:, 20:40], vals[:, 20:40])  # crosses 30 -> flush
+        assert eng.pending == 0
+        assert not np.all(np.asarray(eng.state.sketch.table) == 0.0)
+
+    def test_reads_autoflush(self):
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=6)
+        eng = E.SketchEngine(cfg, flush_elems=10_000)
+        eng.ingest(keys, vals)
+        s = eng.sample(4)  # must see the buffered elements
+        assert eng.pending == 0
+        assert int(np.sum(np.asarray(s.keys) >= 0)) > 0
+
+    def test_shape_validation(self):
+        eng = E.SketchEngine(_cfg("onepass"))
+        with pytest.raises(ValueError, match="num_streams"):
+            eng.ingest(np.zeros((B + 1, 4), np.int32),
+                       np.zeros((B + 1, 4), np.float32))
+        with pytest.raises(ValueError, match="ingest"):
+            eng.ingest(np.zeros((B, 4), np.int32),
+                       np.zeros((B, 5), np.float32))
+
+
+class TestMergeSeedSafety:
+    def test_onepass_merge_rejects_mismatched_transform_seed(self):
+        a = worp.onepass_init(3, 64, 16, seed_sketch=1, seed_transform=7)
+        b = worp.onepass_init(3, 64, 16, seed_sketch=1, seed_transform=8)
+        with pytest.raises(ValueError, match="seed_transform"):
+            worp.onepass_merge(a, b)
+
+    def test_onepass_merge_rejects_mismatched_sketch_seed(self):
+        a = worp.onepass_init(3, 64, 16, seed_sketch=1, seed_transform=7)
+        b = worp.onepass_init(3, 64, 16, seed_sketch=2, seed_transform=7)
+        with pytest.raises(ValueError, match="hash seeds"):
+            worp.onepass_merge(a, b)
+
+    def test_twopass_merge_rejects_mismatched_transform_seed(self):
+        a = worp.twopass_init(16, seed_transform=7)
+        b = worp.twopass_init(16, seed_transform=9)
+        with pytest.raises(ValueError, match="seed_transform"):
+            worp.twopass_merge(a, b)
+
+    def test_countsketch_merge_rejects_mismatched_seed(self):
+        with pytest.raises(ValueError, match="hash seeds"):
+            countsketch.merge(countsketch.init(3, 64, 1),
+                              countsketch.init(3, 64, 2))
+
+    def test_matching_seeds_still_merge(self):
+        a = worp.onepass_init(3, 64, 16, seed_sketch=1, seed_transform=7)
+        b = worp.onepass_init(3, 64, 16, seed_sketch=1, seed_transform=7)
+        m = worp.onepass_merge(a, b)
+        assert int(m.seed_transform) == 7
+
+    def test_tree_merge_rejects_mismatched_shards(self):
+        mk = lambda ts: worp.onepass_init(3, 64, 16, seed_sketch=1,
+                                          seed_transform=ts)
+        with pytest.raises(ValueError, match="seeds"):
+            shd.tree_merge([mk(7), mk(7), mk(9)], worp.onepass_merge)
+
+    def test_tree_merge_matching_shards_ok(self):
+        sts = []
+        rng = np.random.default_rng(8)
+        for i in range(3):
+            st = worp.onepass_init(3, 64, 16, seed_sketch=1, seed_transform=7)
+            sts.append(worp.onepass_update(
+                st, jnp.asarray(rng.integers(0, 500, 30), jnp.int32),
+                jnp.asarray(rng.normal(size=30).astype(np.float32)), 1.0))
+        got = shd.tree_merge(sts, worp.onepass_merge)
+        assert got.sketch.table.shape == (3, 64)
+
+    def test_traced_merge_unaffected(self):
+        """Inside jit/vmap the seeds are tracers: the check must degrade to
+        a no-op, not a trace error (the engine's vmapped merges rely on
+        this)."""
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=10)
+        st = E.onepass_update_batched(E.onepass_init_batched(cfg),
+                                      jnp.asarray(keys), jnp.asarray(vals),
+                                      cfg.p)
+        m = E.onepass_merge_batched(st, st)  # jit(vmap(onepass_merge))
+        assert m.sketch.table.shape == st.sketch.table.shape
+
+
+class TestPaddedSlotFrequencies:
+    def test_underfull_buffer_pads_zero_freqs(self):
+        """Fewer live keys than k: the _EMPTY slots selected to fill the
+        sample must report frequency 0, not an inverted junk estimate."""
+        st = worp.onepass_init(3, 128, 32, seed_sketch=3, seed_transform=5)
+        keys = jnp.asarray([4, 9], jnp.int32)
+        st = worp.onepass_update(st, keys, jnp.asarray([10.0, 20.0]), 1.0)
+        s = worp.onepass_sample(st, 8, 1.0)
+        sel = np.asarray(s.keys)
+        freqs = np.asarray(s.freqs)
+        assert (sel == -1).sum() == 6  # 2 live keys, 6 padded slots
+        np.testing.assert_array_equal(freqs[sel == -1], 0.0)
+        assert np.all(np.abs(freqs[sel != -1]) > 0)
+
+    def test_live_slots_unchanged(self):
+        """Full buffers keep their frequencies bitwise (mask is a no-op)."""
+        rng = np.random.default_rng(11)
+        keys = jnp.asarray(rng.integers(0, 30, 200), jnp.int32)
+        vals = jnp.asarray(np.abs(rng.normal(size=200)).astype(np.float32))
+        st = worp.onepass_init(5, 256, 64, seed_sketch=3, seed_transform=5)
+        st = worp.onepass_update(st, keys, vals, 1.0)
+        s = worp.onepass_sample(st, 8, 1.0)
+        assert np.all(np.asarray(s.keys) >= 0)
+        assert np.all(np.asarray(s.freqs) != 0.0)
+
+
+class TestFailureTestCleanup:
+    def test_q_parameter_dropped(self):
+        assert "q" not in inspect.signature(worp.failure_test).parameters
+
+    def test_fires_on_undersized_sketch(self):
+        """A width-8 single-row sketch of 500 flat keys cannot resolve
+        anything: the exact k-th transformed frequency drowns in the
+        sketch's own error scale and the flag fires."""
+        rng = np.random.default_rng(12)
+        keys = jnp.arange(500, dtype=jnp.int32)
+        vals = jnp.asarray((rng.random(500) + 0.5).astype(np.float32))
+        st1 = worp.onepass_init(1, 8, 32, seed_sketch=3, seed_transform=5)
+        st1 = worp.onepass_update(st1, keys, vals, 1.0)
+        st2 = worp.twopass_update(worp.twopass_init(32, 5), st1.sketch,
+                                  keys, vals)
+        s = worp.twopass_sample(st2, 4, 1.0)
+        assert bool(worp.failure_test(st1.sketch, s, 4, 1.0))
+
+
+class TestPrioritySchemeFastPaths:
+    def test_dense_kernel_priority_matches_jnp(self):
+        """The dense fast path is no longer ppswor-locked: scheme="priority"
+        fuses into the kernel and matches the vmapped jnp path."""
+        cfg = _cfg("onepass", scheme=transforms.PRIORITY, width=256,
+                   candidates=32)
+        rng = np.random.default_rng(13)
+        dense = jnp.asarray(rng.normal(size=(B, 500)).astype(np.float32))
+        fast = E.onepass_update_dense(E.onepass_init_batched(cfg), dense,
+                                      cfg.p, scheme=cfg.scheme)
+        dkeys = jnp.broadcast_to(jnp.arange(500, dtype=jnp.int32), (B, 500))
+        slow = E.onepass_update_batched(E.onepass_init_batched(cfg), dkeys,
+                                        dense, cfg.p, cfg.scheme)
+        np.testing.assert_allclose(np.asarray(fast.sketch.table),
+                                   np.asarray(slow.sketch.table),
+                                   rtol=1e-4, atol=1e-4)
+        assert np.array_equal(np.asarray(fast.cand_keys),
+                              np.asarray(slow.cand_keys))
+
+    def test_engine_update_dense_priority(self):
+        cfg = _cfg("onepass", scheme=transforms.PRIORITY, width=256,
+                   candidates=32)
+        eng = E.SketchEngine(cfg)
+        rng = np.random.default_rng(14)
+        eng.update_dense(jnp.asarray(
+            rng.normal(size=(B, 300)).astype(np.float32)))
+        s = eng.sample(4)
+        assert s.keys.shape == (B, 4)
+
+
+class TestTurnstilePipeline:
+    def test_sparse_stream_deterministic_and_cancelling(self):
+        stream = pipeline.TurnstileZipfStream(vocab_size=64, alpha=1.5,
+                                              seed=3, delete_fraction=0.5)
+        k1, v1 = stream.sparse_batch_at(2, 0, 40)
+        k2, v2 = stream.sparse_batch_at(2, 0, 40)
+        np.testing.assert_array_equal(k1, k2)
+        np.testing.assert_array_equal(v1, v2)
+        assert (v1 < 0).sum() == 20  # deletions present from step > 0
+        freqs = stream.aggregate_freqs(0, 5, 40)
+        assert np.all(freqs >= 0)  # deletions only retract prior inserts
+
+    def test_sketcher_matches_aggregated_stream(self):
+        """FrequencySketcher over the signed stream == the same sketcher
+        over the pre-aggregated frequency vector (kernel and jnp paths)."""
+        stream = pipeline.TurnstileZipfStream(vocab_size=64, alpha=1.8,
+                                              seed=5, delete_fraction=0.25)
+        nsteps, n = 4, 50
+        for use_kernel in (False, True):
+            sk = pipeline.FrequencySketcher(k=8, rows=3, width=128, p=1.0,
+                                            seed=21)
+            for t in range(nsteps):
+                keys, vals = stream.sparse_batch_at(t, 0, n)
+                sk.observe_signed(keys, vals, use_kernel=use_kernel)
+            s = sk.sample()
+            agg = stream.aggregate_freqs(0, nsteps, n)
+            agg_sk = pipeline.FrequencySketcher(k=8, rows=3, width=128,
+                                                p=1.0, seed=21)
+            live = np.nonzero(agg)[0].astype(np.int32)
+            agg_sk.observe_signed(live, agg[live].astype(np.float32))
+            s2 = agg_sk.sample()
+            assert (set(np.asarray(s.keys).tolist())
+                    == set(np.asarray(s2.keys).tolist())), use_kernel
