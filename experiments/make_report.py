@@ -1,9 +1,23 @@
-"""Render EXPERIMENTS.md roofline/dry-run tables from experiments/dryrun/*.json."""
+"""Render EXPERIMENTS.md roofline/dry-run tables from experiments/dryrun/*.json
+and statistical-conformance tables from experiments/conformance/*.json (the
+reports written by ``python -m repro.validate --report`` / the nightly CI
+deep-conformance artifact)."""
 import glob
+import importlib.util
 import json
 import os
 
 HERE = os.path.dirname(__file__)
+
+
+def _load_vreport():
+    """Load repro/validate/report.py directly (pure stdlib) so rendering
+    conformance tables does not import the jax-backed validate package."""
+    path = os.path.join(HERE, "..", "src", "repro", "validate", "report.py")
+    spec = importlib.util.spec_from_file_location("_vreport", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def load():
@@ -57,6 +71,29 @@ def fmt_variants(recs):
     return "\n".join(out)
 
 
+def fmt_conformance():
+    """Markdown tables for every conformance report under
+    experiments/conformance/ (repro.validate JSON schema)."""
+    vreport = _load_vreport()
+    out = []
+    for f in sorted(glob.glob(os.path.join(HERE, "conformance", "*.json"))):
+        rep = vreport.load(f)
+        out.append(f"### {os.path.basename(f)}")
+        meta = rep.get("meta", {})
+        cfgd = meta.get("config", {})
+        if cfgd:
+            out.append(f"trials={cfgd.get('trials')} "
+                       f"ref_trials={cfgd.get('ref_trials')} "
+                       f"delta={cfgd.get('delta')} "
+                       f"table3_trials={meta.get('table3_trials')}")
+        out.append("")
+        out.append(vreport.format_markdown(rep))
+        out.append("")
+        out.append(f"`{vreport.summary_line(rep)}`")
+        out.append("")
+    return "\n".join(out) if out else "(no conformance reports found)"
+
+
 if __name__ == "__main__":
     recs = load()
     ok = [r for r in recs if r.get("status") == "ok"]
@@ -69,3 +106,5 @@ if __name__ == "__main__":
     print(fmt_skips(recs))
     print("\n## variants\n")
     print(fmt_variants(recs))
+    print("\n## statistical conformance (repro.validate)\n")
+    print(fmt_conformance())

@@ -23,6 +23,12 @@ def inclusion_probability(
     freqs: jnp.ndarray, tau: jnp.ndarray, p: float,
     scheme: str = transforms.PPSWOR,
 ) -> jnp.ndarray:
+    # Batched-Sample hook (repro.validate trial runners): a (T, k) freqs
+    # array with its (T,) per-trial thresholds broadcasts per trial, so HT
+    # estimates over T trials need no vmap round-trip.
+    tau = jnp.asarray(tau, jnp.float32)
+    if tau.ndim == jnp.ndim(freqs) - 1:
+        tau = tau[..., None]
     ratio = (jnp.abs(freqs.astype(jnp.float32)) / tau) ** jnp.float32(p)
     if scheme == transforms.PPSWOR:
         # Guard the p_x -> 0 limit: expm1 keeps precision for small ratios.

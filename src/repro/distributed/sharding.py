@@ -226,13 +226,64 @@ def tree_merge(states: Sequence, merge_fn):
     return states[0]
 
 
-def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None):
-    """O(log D) all-merge inside ``shard_map`` for any composable state.
+def _check_partner_seeds(a, b, round_idx: int) -> None:
+    """butterfly_allmerge's per-round mirror of the ``tree_merge`` guard:
+    the XOR-partner's uint32 seed leaves must agree with ours before the
+    pair is merged.  Concrete states (the host-side list form, eager
+    debugging) get the full check; inside ``shard_map``/``jit`` the leaves
+    are tracers and the check degrades to a no-op exactly like
+    ``worp.check_merge_seeds`` (the engine/config layer validates there).
+    """
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        if getattr(x, "dtype", None) == jnp.uint32 \
+                and hashing.seeds_concretely_differ(x, y):
+            raise ValueError(
+                f"butterfly_allmerge: round {round_idx} would merge states "
+                f"with different hash/transform seeds ({x!r} vs {y!r}); "
+                f"shards built from different seeds are not shards of one "
+                f"logical stream and cannot be merged (same contract as "
+                f"tree_merge)")
 
-    Requires a power-of-two axis; falls back to an all_gather + host-side
-    tree for ragged device counts (correct, one extra gather of state size).
+
+def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None):
+    """O(log D) all-merge for any composable state.
+
+    Two forms:
+      * collective (inside ``shard_map``): ``state`` is this device's
+        shard; round r exchanges with the XOR-partner at distance 2^r via
+        ppermute and merges.  Requires a power-of-two axis; ragged device
+        counts fall back to an all_gather + host-side tree (correct, one
+        extra gather of state size).
+      * host-side (eager): ``state`` is a LIST/TUPLE of per-shard states
+        (``axis_name``/``axis_size`` ignored); the same XOR-partner rounds
+        run as plain indexing.  Requires a power-of-two shard count; use
+        ``tree_merge`` for ragged counts.
+
+    Both forms enforce the tree_merge seed-agreement contract: merging
+    shards whose uint32 seed leaves concretely disagree raises a
+    descriptive ValueError (tracer seeds inside jit/shard_map skip the
+    check, mirroring ``worp.check_merge_seeds``).
     """
     merge_fn = _resolve_merge(merge_fn)
+    # Host form = a plain list/tuple of shard states.  Sampler states are
+    # NamedTuples (tuple subclasses), so match exact types only.
+    if isinstance(state, list) or type(state) is tuple:
+        states = list(state)
+        d = len(states)
+        if d == 0:
+            raise ValueError("butterfly_allmerge of no states")
+        if d & (d - 1):
+            raise ValueError(
+                f"butterfly_allmerge host form needs a power-of-two shard "
+                f"count, got {d}; use tree_merge for ragged counts")
+        for r in range(d.bit_length() - 1):
+            dist = 1 << r
+            for i in range(d):
+                _check_partner_seeds(states[i], states[i ^ dist], r)
+            states = [merge_fn(states[i], states[i ^ dist])
+                      for i in range(d)]
+        return states[0]
     if axis_size is None:
         mesh = _CTX.mesh
         assert mesh is not None, "butterfly_allmerge needs axis_size or mesh"
@@ -251,6 +302,7 @@ def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None):
         perm = [(i, i ^ dist) for i in range(d)]
         partner = jax.tree_util.tree_map(
             lambda x: jax.lax.ppermute(x, axis_name, perm), state)
+        _check_partner_seeds(state, partner, r)
         state = merge_fn(state, partner)
     return state
 

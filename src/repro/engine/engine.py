@@ -73,11 +73,18 @@ def engine_spec(cfg: EngineConfig) -> SamplerSpec:
     return core_sampler.make_sampler(cfg.sampler, sampler_config(cfg))
 
 
-def derive_stream_seeds(cfg: EngineConfig):
-    """Per-stream (sketch, transform) seed vectors, both (B,) uint32."""
-    b = jnp.arange(cfg.num_streams, dtype=jnp.uint32)
+def derive_stream_seeds(cfg: EngineConfig, offset: int = 0):
+    """Per-stream (sketch, transform) seed vectors, both (B,) uint32.
+
+    ``offset`` shifts the stream indices the seeds are hashed from: block t
+    of a repeated-trial experiment passes ``offset = t * num_streams`` to
+    get B FRESH independent samplers per block without constructing a new
+    config -- the ``repro.validate`` trial-seeding hook.  Ignored under
+    ``shared_seeds`` (shards of one logical stream have one seed pair).
+    """
+    b = jnp.arange(cfg.num_streams, dtype=jnp.uint32) + jnp.uint32(offset)
     if cfg.shared_seeds:
-        ones = jnp.ones_like(b)
+        ones = jnp.ones((cfg.num_streams,), jnp.uint32)
         return (ones * jnp.uint32(cfg.seed),
                 ones * jnp.uint32(cfg.seed ^ 0xA5A5A5A5))
     return (hashing.hash_u32(b, jnp.uint32(cfg.seed)),

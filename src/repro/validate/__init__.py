@@ -1,0 +1,30 @@
+"""Statistical conformance harness: distribution-level WOR guarantees.
+
+``repro.validate`` is the correctness safety net over the whole sampler
+registry: seeded Monte-Carlo trial ensembles (``empirics``), acceptance
+tolerances derived from trial counts instead of hand-tuned epsilons
+(``bounds``), named distribution-level checks (``conformance``), and
+machine-readable pass/fail reports (``report``).
+
+Run it:
+
+    PYTHONPATH=src python -m repro.validate                 # fast suite
+    PYTHONPATH=src python -m repro.validate --deep --report out.json
+
+or via pytest: ``tests/test_conformance.py`` (tier-1 subset by default,
+``-m deep`` for the full grids).
+"""
+from . import bounds, empirics, report  # noqa: F401
+from .conformance import (  # noqa: F401
+    BOTTOMK,
+    ConformanceConfig,
+    check_ht_unbiased,
+    check_inclusion_probabilities,
+    check_table3_nrmse,
+    check_wor_beats_wr,
+    check_wor_distinct,
+    prepare_cell,
+    run_cell,
+    run_suite,
+)
+from .report import CheckResult, summary_line  # noqa: F401

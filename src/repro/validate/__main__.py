@@ -1,0 +1,85 @@
+"""CLI entry point: ``PYTHONPATH=src python -m repro.validate``.
+
+Runs the conformance suite over the sampler registry and prints one line
+per check plus the greppable ``conformance_summary,...`` line; ``--report``
+writes the JSON report consumed by CI artifacts and
+``experiments/make_report.py``.  Exit status is nonzero on any failed
+check, so the nightly deep-conformance job fails loudly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core.sampler import available
+from repro.core.transforms import PPSWOR, PRIORITY
+
+from . import conformance, empirics, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.validate",
+        description="Distribution-level conformance suite over the sampler "
+                    "registry (see repro.validate docs)")
+    ap.add_argument("--samplers", nargs="*", default=None,
+                    choices=list(available()),
+                    help="subset of registry samplers (default: all)")
+    ap.add_argument("--schemes", nargs="*", default=[PPSWOR, PRIORITY],
+                    choices=[PPSWOR, PRIORITY])
+    ap.add_argument("--ps", nargs="*", type=float, default=None,
+                    help="ell_p exponents (default: fast 1.0; deep "
+                         "0.5 1.0 1.5 2.0)")
+    ap.add_argument("--paths", nargs="*", default=list(empirics.PATHS),
+                    choices=list(empirics.PATHS),
+                    help="data planes: dense (vmapped update) and/or "
+                         "ingest (batched scatter kernel)")
+    ap.add_argument("--trials", type=int, default=None,
+                    help="Monte-Carlo trials per cell (default: fast 160, "
+                         "deep 384)")
+    ap.add_argument("--deep", action="store_true",
+                    help="full grids + larger trial counts + Table-3 "
+                         "golden-value rows (the nightly CI job)")
+    ap.add_argument("--fast", action="store_true",
+                    help="smallest useful suite (bench-smoke summary line)")
+    ap.add_argument("--table3-trials", type=int, default=None,
+                    help="randomizations for the Table-3 NRMSE check "
+                         "(0 disables; default: 0 fast, 12 deep)")
+    ap.add_argument("--seed", type=int, default=0xC0F)
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write the JSON report here")
+    args = ap.parse_args(argv)
+
+    if args.deep:
+        ps = args.ps or list(conformance.PS)
+        trials = args.trials or 384
+        table3 = args.table3_trials if args.table3_trials is not None else 12
+    elif args.fast:
+        ps = args.ps or [1.0]
+        trials = args.trials or 96
+        table3 = args.table3_trials or 0
+    else:
+        ps = args.ps or [1.0]
+        trials = args.trials or 160
+        table3 = args.table3_trials or 0
+
+    cfg = conformance.ConformanceConfig(trials=trials, ref_trials=3 * trials,
+                                        seed=args.seed)
+    rep = conformance.run_suite(samplers=args.samplers, schemes=args.schemes,
+                                ps=ps, paths=args.paths, cfg=cfg,
+                                table3_trials=table3)
+    for r in rep["results"]:
+        d = r["details"]
+        extra = (f" reason={d['reason']!r}" if r["status"] == report.SKIP
+                 else f" worst_margin={d.get('worst_margin', 0):+.3g}")
+        print(f"conformance_check,{r['check']},{r['sampler']},{r['scheme']},"
+              f"p={r['p']:g},{r['path']},{r['status']}{extra}")
+    print(report.summary_line(rep))
+    if args.report:
+        report.write(rep, args.report)
+        print(f"report written to {args.report}")
+    return 0 if report.ok(rep) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

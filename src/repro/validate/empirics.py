@@ -1,0 +1,185 @@
+"""Vectorized repeated-trial runners over the sampler registry.
+
+A *trial* is one full run of a sampler on a fixed frequency vector under a
+fresh hash/transform seed pair.  The engine's batched ops make T trials ONE
+vmapped computation: ``derive_trial_seeds`` (the engine's trial-seeding
+hook) hands out T independent seed pairs, ``run_trials`` feeds the same
+data to all T samplers through either the dense ``update`` plane (vmapped
+spec update) or the sparse ``ingest`` plane (the batched Pallas scatter
+path via ``engine.ingest_sparse``), and every downstream statistic --
+per-key inclusion counts, HT sum/moment estimates, sample distinctness --
+is computed over the leading (T,) axis.
+
+The oracle side (``perfect_trials``) evaluates the exact bottom-k sample of
+the TRUE frequency vector for T reference seeds; it also returns the full
+per-trial transformed-frequency matrix, which the bounds layer uses to
+derive sketch-noise flip allowances for estimated samplers.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimators, perfect, transforms
+from repro.core.sampler import SamplerConfig, SamplerSpec, make_sampler
+from repro.engine import engine as eng
+
+_EMPTY = -1
+
+DENSE = "dense"
+INGEST = "ingest"
+PATHS = (DENSE, INGEST)
+
+
+def zipf_freqs(n: int, alpha: float, seed: int = 0,
+               scale: float = 1000.0) -> np.ndarray:
+    """Deterministic Zipf[alpha] frequency vector, randomly permuted so key
+    id carries no rank information (freq(rank r) ~ r^-alpha)."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    f = ranks ** (-alpha)
+    f = f / f[0] * scale
+    rng = np.random.default_rng(seed)
+    return f[rng.permutation(n)].astype(np.float32)
+
+
+def derive_trial_seeds(trials: int, seed: int, offset: int = 0):
+    """T independent (sketch, transform) seed pairs via the engine's
+    stream-seed derivation (block ``offset`` in stream-index units, so
+    disjoint offsets give statistically independent trial banks)."""
+    cfg = eng.EngineConfig(num_streams=trials, seed=int(seed))
+    return eng.derive_stream_seeds(cfg, offset=offset)
+
+
+def spec_for(name: str, n: int, k: int, p: float, scheme: str,
+             rows: int = 5, width: Optional[int] = None,
+             candidates: Optional[int] = None,
+             capacity: Optional[int] = None,
+             num_samplers: int = 8) -> SamplerSpec:
+    """Registry spec at the conformance operating point: the paper's k x 31
+    CountSketch geometry (Sec. 7) unless overridden."""
+    return make_sampler(name, SamplerConfig(
+        rows=rows,
+        width=width if width is not None else 31 * k,
+        candidates=candidates if candidates is not None else 4 * k,
+        capacity=capacity if capacity is not None else 4 * k,
+        p=p, scheme=scheme, domain=n, num_samplers=num_samplers))
+
+
+def run_trials(spec: SamplerSpec, freqs: np.ndarray, k: int, trials: int,
+               seed: int, path: str = DENSE, chunks: int = 3,
+               offset: int = 0):
+    """Run T independent trials of ``spec`` over ``freqs``; returns the
+    batched Sample (leading (T,) axis on every leaf) and the final batched
+    state.
+
+    ``path`` selects the data plane: ``"dense"`` goes through the vmapped
+    spec update (the jnp reference plane); ``"ingest"`` goes through
+    ``engine.ingest_sparse`` -- the batched Pallas scatter kernel for every
+    sketch-backed sampler, the vmapped fallback otherwise -- so both planes
+    face the same distributional acceptance bounds.  The stream is split
+    into ``chunks`` element batches to exercise streaming accumulation.
+    """
+    if path not in PATHS:
+        raise ValueError(f"unknown trial path {path!r}; expected {PATHS}")
+    n = int(np.shape(freqs)[0])
+    keys = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (trials, n))
+    vals = jnp.broadcast_to(jnp.asarray(freqs, jnp.float32), (trials, n))
+    sk_seeds, t_seeds = derive_trial_seeds(trials, seed, offset=offset)
+    ops = eng.batched_ops(spec)
+    st = ops.init(sk_seeds, t_seeds)
+    step = -(-n // chunks)
+    for lo in range(0, n, step):
+        kc, vc = keys[:, lo:lo + step], vals[:, lo:lo + step]
+        if path == DENSE:
+            st = ops.update(st, kc, vc)
+        else:
+            st = eng.ingest_sparse(spec, st, kc, vc)
+    return ops.sample(st, k=k), st
+
+
+def perfect_trials(freqs: np.ndarray, k: int, p: float, scheme: str,
+                   trials: int, seed: int, offset: int = 0):
+    """Exact bottom-k oracle over T reference seeds.
+
+    Returns (batched Sample, tstar, thresholds): ``tstar`` is the (T, n)
+    matrix of exact transformed frequencies |nu*| per trial -- the
+    randomization ensemble itself -- and ``thresholds`` the (T,) (k+1)-st
+    magnitudes, both consumed by the sketch-noise allowance bounds.
+    """
+    _, t_seeds = derive_trial_seeds(trials, seed, offset=offset)
+    fv = jnp.asarray(freqs, jnp.float32)
+    n = fv.shape[0]
+    keys = jnp.arange(n, dtype=jnp.int32)
+
+    sample = jax.jit(jax.vmap(
+        lambda ts: perfect.ppswor_sample(fv, k, p, ts, scheme)))(t_seeds)
+    tstar = jax.jit(jax.vmap(
+        lambda ts: transforms.transform_frequencies(keys, fv, p, ts, scheme)
+    ))(t_seeds)
+    return sample, np.asarray(tstar), np.asarray(sample.threshold)
+
+
+# ---------------------------------------------------------------------------
+# statistics over the (T,) trial axis
+# ---------------------------------------------------------------------------
+
+def inclusion_counts(sample_keys, n: int) -> np.ndarray:
+    """(n,) per-key inclusion counts over trials (WOR: each trial counts a
+    key at most once; distinctness is asserted separately)."""
+    ks = np.asarray(sample_keys).reshape(-1)
+    ks = ks[(ks >= 0) & (ks < n)]
+    return np.bincount(ks, minlength=n)[:n].astype(np.int64)
+
+
+def distinctness(sample_keys) -> np.ndarray:
+    """(T,) bool: no live key appears twice within a trial's sample."""
+    s = np.sort(np.asarray(sample_keys), axis=1)
+    dup = (s[:, 1:] == s[:, :-1]) & (s[:, 1:] >= 0)
+    return ~dup.any(axis=1)
+
+
+def live_fraction(sample_keys) -> float:
+    """Mean fraction of non-padding slots across trials."""
+    ks = np.asarray(sample_keys)
+    return float((ks != _EMPTY).mean())
+
+
+def ht_estimates(sample, p: float, f: Callable[[jnp.ndarray], jnp.ndarray],
+                 scheme: str = transforms.PPSWOR) -> np.ndarray:
+    """(T,) Horvitz-Thompson estimates of sum_x f(nu_x) from a batched
+    Sample (Eq. 2 per trial; padded / zero-frequency slots contribute 0)."""
+    per = estimators.per_key_estimates(sample, p, f, scheme)
+    live = (sample.keys != _EMPTY) & (jnp.abs(sample.freqs) > 0)
+    per = jnp.where(live, per, 0.0)
+    return np.asarray(jnp.sum(per, axis=-1), np.float64)
+
+
+def wr_moment_estimates(freqs: np.ndarray, k: int, p: float, power: float,
+                        trials: int, seed: int) -> np.ndarray:
+    """(T,) perfect WITH-replacement ell_p moment estimates (the paper's WR
+    baseline, Sec. 7): k i.i.d. draws ~ |nu|^p, importance-weighted."""
+    w = np.abs(np.asarray(freqs, np.float64))
+    probs = (w ** p) / (w ** p).sum()
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    fv = jnp.asarray(freqs)
+    draws = np.asarray(jax.jit(jax.vmap(
+        lambda kk: perfect.wr_sample(fv, k, p, kk)))(keys))
+    return ((w[draws] ** power) / (k * probs[draws])).sum(axis=1)
+
+
+def moment_truth(freqs: np.ndarray, power: float) -> float:
+    return float((np.abs(np.asarray(freqs, np.float64)) ** power).sum())
+
+
+def nrmse(estimates: np.ndarray, truth: float) -> float:
+    e = np.asarray(estimates, np.float64)
+    return float(np.sqrt(np.mean((e - truth) ** 2)) / abs(truth))
+
+
+def sample_keys_set(sample, trial: int) -> Tuple[int, ...]:
+    """Sorted live keys of one trial (debug/reporting helper)."""
+    ks = np.asarray(sample.keys[trial])
+    return tuple(sorted(int(x) for x in ks[ks >= 0]))

@@ -1,10 +1,27 @@
-"""Shared test fixtures.
+"""Shared test fixtures + test-tier marker registration.
+
+Tiers (see also pytest.ini, whose addopts deselect the slow tiers):
+  * unmarked       -- tier-1: fast, runs on every push (`pytest -q`).
+  * @pytest.mark.deep  -- full statistical-conformance / kernel grids with
+    large Monte-Carlo trial counts; nightly CI (`pytest -m deep`).
+  * @pytest.mark.bench -- benchmark-style timing tests; opt-in only.
 
 NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see the
 single real CPU device; only launch/dryrun.py requests 512 host devices.
 """
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "deep: full conformance/kernel grids with large trial counts "
+        "(nightly; deselected from tier-1 by pytest.ini addopts)")
+    config.addinivalue_line(
+        "markers",
+        "bench: benchmark-style timing tests (opt-in; deselected from "
+        "tier-1 by pytest.ini addopts)")
 
 
 @pytest.fixture

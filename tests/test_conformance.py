@@ -1,0 +1,281 @@
+"""Statistical conformance: distribution-level WOR guarantees across the
+whole sampler registry (repro.validate).
+
+The grid is sampler x scheme x p in {0.5, 1, 1.5, 2} x {dense, ingest}.
+Tier-1 runs the p=1 subset (all samplers/schemes on the dense plane, the
+kernel-backed samplers on the sparse-ingest plane) with small trial counts;
+the full grid at larger trial counts is ``-m deep`` (the nightly CI job).
+
+All tolerances are DERIVED by repro.validate.bounds from the trial counts,
+failure budget, and sketch geometry -- there are no hand-tuned epsilons in
+this file.  The TestHarnessCanFail class proves the harness has teeth:
+deliberately broken samplers (per-trial seed reuse; top-k off-by-one) must
+FAIL the inclusion check.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transforms
+from repro.core.perfect import Sample
+from repro.core.sampler import available
+from repro.validate import bounds, empirics, report
+from repro.validate import conformance as C
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG_FAST = C.ConformanceConfig(trials=128, ref_trials=384)
+CFG_DEEP = C.ConformanceConfig(trials=384, ref_trials=1152)
+
+
+def _grid():
+    """Full sampler x scheme x p x path grid; the tier-1 subset is the p=1
+    slice (dense everywhere + ingest for the Pallas-backed samplers)."""
+    params = []
+    for name, scheme, p, path in itertools.product(
+            available(), C.SCHEMES, C.PS, empirics.PATHS):
+        fast = p == 1.0 and (path == empirics.DENSE
+                             or name in ("onepass", "twopass"))
+        marks = () if fast else (pytest.mark.deep,)
+        params.append(pytest.param(
+            name, scheme, p, path, marks=marks,
+            id=f"{name}-{scheme}-p{p:g}-{path}"))
+    return params
+
+
+class TestRegistryConformance:
+    @pytest.mark.parametrize("name,scheme,p,path", _grid())
+    def test_cell(self, name, scheme, p, path, request):
+        deep = request.node.get_closest_marker("deep") is not None
+        cfg = CFG_DEEP if deep else CFG_FAST
+        results = C.run_cell(name, scheme, p, path, cfg)
+        failed = [r for r in results if r.status == report.FAIL]
+        assert not failed, "\n".join(
+            f"{r.check}: {r.details}" for r in failed)
+        # every cell must be covered by at least one real (non-skip) check
+        assert any(r.status == report.PASS for r in results)
+
+    def test_skips_are_only_where_documented(self):
+        """The tv cascade is the only sampler allowed to skip the bottom-k
+        checks (it samples by a different process).  Skip statuses do not
+        depend on trial counts, so a tiny config keeps this cheap."""
+        tiny = C.ConformanceConfig(trials=16, ref_trials=32)
+        for name in available():
+            rs = C.run_cell(name, transforms.PPSWOR, 1.0, empirics.DENSE,
+                            tiny)
+            skipped = {r.check for r in rs if r.status == report.SKIP}
+            if name == "tv":
+                assert skipped == {"inclusion_probabilities", "ht_unbiased",
+                                   "wor_beats_wr"}
+            else:
+                assert skipped <= {"tv_single_draw", "wor_beats_wr"}
+
+
+class TestTable3Golden:
+    def test_fast_single_row(self):
+        """One Table-3 row against the paper's golden values (tier-1)."""
+        rows = [(1.0, 2.0, 3.0)]
+        results = C.check_table3_nrmse(trials=8, rows=rows)
+        assert len(results) == 3  # wor / one / two
+        for r in results:
+            assert r.status == report.PASS, r.details
+
+    @pytest.mark.deep
+    def test_all_rows(self):
+        results = C.check_table3_nrmse(trials=24)
+        bad = [r for r in results if r.status != report.PASS]
+        assert not bad, "\n".join(f"{r.sampler}: {r.details}" for r in bad)
+
+
+class TestHarnessCanFail:
+    """Negative controls: the harness must be able to FAIL.
+
+    Both broken samplers wrap the exact oracle spec, so any failure is a
+    genuine distributional detection, not sketch noise.
+    """
+
+    def _base(self, cfg):
+        return empirics.spec_for("perfect", cfg.n, cfg.k, 1.0,
+                                 transforms.PPSWOR)
+
+    def test_seed_reuse_fails_inclusion(self):
+        """A sampler that reuses ONE transform seed across trials (the
+        motivating bug class: seed reuse across engine streams) collapses
+        every trial to the same sample -- inclusion frequencies go 0/1 and
+        must violate the binomial tolerance."""
+        cfg = CFG_FAST
+        base = self._base(cfg)
+        broken = base._replace(
+            init=lambda ss, ts: base.init(ss, jnp.uint32(0xDEAD)))
+        r = C.check_inclusion_probabilities(
+            "perfect", transforms.PPSWOR, 1.0, empirics.DENSE, cfg,
+            spec=broken)
+        assert r.status == report.FAIL
+        assert r.details["worst_margin"] > 0
+
+    def test_topk_off_by_one_fails_inclusion(self):
+        """A sampler with broken tie-breaking that silently drops the top
+        key (returns ranks 2..k+1) must fail: the heavy keys' inclusion
+        frequencies sag far below the oracle's."""
+        cfg = CFG_FAST
+        base = self._base(cfg)
+
+        def sample(st, k):
+            s = base.sample(st, k + 1)
+            return Sample(keys=s.keys[1:], freqs=s.freqs[1:],
+                          threshold=s.threshold,
+                          transformed=s.transformed[1:])
+
+        broken = base._replace(sample=sample)
+        r = C.check_inclusion_probabilities(
+            "perfect", transforms.PPSWOR, 1.0, empirics.DENSE, cfg,
+            spec=broken)
+        assert r.status == report.FAIL
+
+    def test_duplicated_key_fails_distinct(self):
+        """A WR-style sampler (repeats its top key) must fail wor_distinct."""
+        cfg = CFG_FAST
+        base = self._base(cfg)
+
+        def sample(st, k):
+            s = base.sample(st, k)
+            keys = s.keys.at[-1].set(s.keys[0])  # replacement!
+            return Sample(keys=keys, freqs=s.freqs, threshold=s.threshold,
+                          transformed=s.transformed)
+
+        broken = base._replace(sample=sample)
+        r = C.check_wor_distinct("perfect", transforms.PPSWOR, 1.0,
+                                 empirics.DENSE, cfg, spec=broken)
+        assert r.status == report.FAIL
+
+
+class TestBounds:
+    """The tolerance derivations behave like the statistics they claim."""
+
+    def test_radii_shrink_with_trials(self):
+        assert bounds.hoeffding_radius(4000, 1e-3) \
+            < bounds.hoeffding_radius(400, 1e-3) \
+            < bounds.hoeffding_radius(40, 1e-3)
+        assert bounds.dkw_radius(4000, 1e-3) < bounds.dkw_radius(40, 1e-3)
+        assert bounds.clt_mean_radius(1.0, 4000, 1e-3) \
+            < bounds.clt_mean_radius(1.0, 40, 1e-3)
+
+    def test_union_bound_grows_with_support(self):
+        assert bounds.hoeffding_radius(100, 1e-3, support=1000) \
+            > bounds.hoeffding_radius(100, 1e-3, support=1)
+
+    def test_bernstein_beats_hoeffding_for_rare_events(self):
+        """Near-0/1 empirical frequencies get much tighter radii."""
+        b = bounds.binomial_radius(np.array([0.001]), 2000, 1e-3,
+                                   support=100)
+        h = bounds.hoeffding_radius(2000, 1e-3, support=100)
+        assert float(b[0]) < 0.6 * h
+
+    def test_chi2_quantile_close_to_tables(self):
+        # chi^2_{0.95}(10) = 18.307, chi^2_{0.05}(10) = 3.940
+        assert abs(bounds.chi2_quantile(10, 0.95) - 18.307) < 0.25
+        assert abs(bounds.chi2_quantile(10, 0.05) - 3.940) < 0.25
+
+    def test_nrmse_factors_bracket_one(self):
+        up, lo = bounds.nrmse_upper_factor(40, 1e-3), \
+            bounds.nrmse_lower_factor(40, 1e-3)
+        assert lo < 1.0 < up
+        # more trials -> tighter bracket
+        assert bounds.nrmse_upper_factor(400, 1e-3) < up
+
+    def test_sign_test_threshold(self):
+        need = bounds.sign_test_min_wins(100, 1e-3)
+        assert 50 < need < 100
+        assert bounds.sign_test_min_wins(100, 1e-6) > need
+
+    def test_median_flip_bound_decays_with_rows(self):
+        q = np.array([0.01])
+        assert float(bounds.median_flip_bound(q, 7)[0]) \
+            < float(bounds.median_flip_bound(q, 3)[0]) < 1.0
+
+    def test_coverage_monte_carlo(self):
+        """Empirical coverage: the binomial radius holds for a true
+        binomial at (far better than) the nominal failure rate."""
+        rng = np.random.default_rng(0)
+        p_true, trials, reps, delta = 0.3, 400, 300, 0.05
+        phat = rng.binomial(trials, p_true, size=reps) / trials
+        rad = bounds.binomial_radius(phat, trials, delta)
+        viol = np.mean(np.abs(phat - p_true) > rad)
+        assert viol <= delta
+
+
+class TestEmpirics:
+    def test_trial_seeds_are_distinct_and_blocked(self):
+        s1, t1 = empirics.derive_trial_seeds(64, seed=1)
+        s2, t2 = empirics.derive_trial_seeds(64, seed=1, offset=64)
+        assert len(np.unique(np.asarray(t1))) == 64
+        assert not np.intersect1d(np.asarray(t1), np.asarray(t2)).size
+        assert not np.intersect1d(np.asarray(s1), np.asarray(s2)).size
+
+    def test_inclusion_counts_and_distinctness(self):
+        keys = np.array([[0, 1, 2], [2, 2, -1], [5, -1, -1]])
+        counts = empirics.inclusion_counts(keys, 6)
+        assert counts.tolist() == [1, 1, 3, 0, 0, 1]
+        assert empirics.distinctness(keys).tolist() == [True, False, True]
+        assert empirics.live_fraction(keys) == pytest.approx(6 / 9)
+
+    def test_dense_and_ingest_paths_agree_distributionally(self):
+        """Same seeds + same data: the two data planes produce identical
+        samples for the exact oracle (stronger than distributional)."""
+        freqs = empirics.zipf_freqs(64, 2.0, seed=3)
+        spec = empirics.spec_for("perfect", 64, 4, 1.0, transforms.PPSWOR)
+        sd, _ = empirics.run_trials(spec, freqs, 4, 32, seed=5,
+                                    path=empirics.DENSE)
+        si, _ = empirics.run_trials(spec, freqs, 4, 32, seed=5,
+                                    path=empirics.INGEST)
+        assert np.array_equal(np.asarray(sd.keys), np.asarray(si.keys))
+
+    def test_ht_estimates_match_scalar_estimator(self):
+        """Batched HT == per-trial scalar sum_statistic (the estimators
+        broadcast hook under test)."""
+        from repro.core import estimators
+
+        freqs = empirics.zipf_freqs(64, 2.0, seed=3)
+        spec = empirics.spec_for("perfect", 64, 4, 1.0, transforms.PPSWOR)
+        s, _ = empirics.run_trials(spec, freqs, 4, 8, seed=5)
+        batched = empirics.ht_estimates(s, 1.0, lambda w: jnp.abs(w))
+        for t in range(8):
+            one = jax.tree_util.tree_map(lambda x: x[t], s)
+            want = float(estimators.sum_statistic(one, 1.0,
+                                                  lambda w: jnp.abs(w)))
+            assert batched[t] == pytest.approx(want, rel=1e-6)
+
+
+class TestReport:
+    def test_roundtrip_and_summary(self, tmp_path):
+        rs = [report.CheckResult("c1", "onepass", "ppswor", 1.0, "dense",
+                                 report.PASS, {"worst_margin": -0.5}),
+              report.CheckResult("c2", "tv", "ppswor", 1.0, "ingest",
+                                 report.SKIP, {"reason": "n/a"}),
+              report.CheckResult("c3", "twopass", "priority", 2.0, "dense",
+                                 report.FAIL,
+                                 {"worst_margin": np.float64(0.2)})]
+        rep = report.build(rs, meta={"trials": np.int64(7)})
+        path = report.write(rep, str(tmp_path / "r.json"))
+        back = report.load(path)
+        assert back["summary"] == {"passed": 1, "failed": 1, "skipped": 1,
+                                   "total": 3}
+        assert not report.ok(back)
+        assert report.summary_line(back) == \
+            "conformance_summary,passed=1,failed=1,skipped=1,total=3"
+        assert len(report.failures(back)) == 1
+        md = report.format_markdown(back)
+        assert "| c3 | twopass |" in md and "1 fail" in md
+
+    def test_suite_report_shape(self):
+        """run_suite produces a well-formed report (tiny suite)."""
+        cfg = C.ConformanceConfig(trials=48, ref_trials=96)
+        rep = C.run_suite(samplers=["perfect"],
+                          schemes=[transforms.PPSWOR], ps=[1.0],
+                          paths=[empirics.DENSE], cfg=cfg)
+        assert rep["summary"]["failed"] == 0
+        assert rep["summary"]["total"] == len(C.CELL_CHECKS)
+        assert rep["meta"]["samplers"] == ["perfect"]

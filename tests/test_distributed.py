@@ -134,6 +134,85 @@ print("ELASTIC_OK")
         assert "ELASTIC_OK" in r.stdout, r.stderr[-2000:]
 
 
+class TestEngineCheckpoint:
+    """SketchEngine batched states survive a checkpoint round-trip for EVERY
+    registered sampler: same treedef, same leaf dtypes (uint32 seeds
+    included), and bit-identical subsequent sample/estimate outputs when
+    restored into a freshly constructed engine (the restart scenario)."""
+
+    def _cfg(self, name):
+        from repro import engine as E
+
+        return E.EngineConfig(num_streams=3, rows=3, width=128,
+                              candidates=16, capacity=16, p=1.0, seed=11,
+                              sampler=name, domain=600, num_samplers=3)
+
+    def _data(self):
+        rng = np.random.default_rng(0)
+        return (jnp.asarray(rng.integers(0, 500, (3, 40)), jnp.int32),
+                jnp.asarray(rng.normal(size=(3, 40)).astype(np.float32)))
+
+    @pytest.mark.parametrize("name", ["onepass", "twopass", "perfect", "tv"])
+    def test_state_roundtrip_every_sampler(self, tmp_path, name):
+        from repro import engine as E
+
+        cfg = self._cfg(name)
+        keys, vals = self._data()
+        eng = E.SketchEngine(cfg)
+        eng.ingest(keys, vals)
+        eng.flush()  # checkpoint the device state, not the host buffer
+        checkpoint.save(str(tmp_path), 5, eng.state,
+                        extra={"sampler": name})
+
+        fresh = E.SketchEngine(cfg)  # restart: like-tree from a fresh init
+        restored, step = checkpoint.restore_latest(str(tmp_path),
+                                                   fresh.state)
+        assert step == 5
+        assert (jax.tree_util.tree_structure(restored)
+                == jax.tree_util.tree_structure(eng.state))
+        for a, b in zip(jax.tree_util.tree_leaves(eng.state),
+                        jax.tree_util.tree_leaves(restored)):
+            assert a.dtype == b.dtype
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        fresh.state = restored
+
+        s_old, s_new = eng.sample(4), fresh.sample(4)
+        assert np.array_equal(np.asarray(s_old.keys), np.asarray(s_new.keys))
+        assert np.array_equal(np.asarray(s_old.freqs),
+                              np.asarray(s_new.freqs))
+        assert np.array_equal(np.asarray(s_old.threshold),
+                              np.asarray(s_new.threshold), equal_nan=True)
+        e_old, e_new = eng.estimate(keys[:, :8]), fresh.estimate(keys[:, :8])
+        assert np.array_equal(np.asarray(e_old), np.asarray(e_new))
+        # restored engines keep working: further updates agree bitwise
+        eng.update(keys[:, :8], vals[:, :8])
+        fresh.update(keys[:, :8], vals[:, :8])
+        for a, b in zip(jax.tree_util.tree_leaves(eng.state),
+                        jax.tree_util.tree_leaves(fresh.state)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_pass2_state_roundtrip(self, tmp_path):
+        from repro import engine as E
+
+        cfg = self._cfg("onepass")
+        keys, vals = self._data()
+        eng = E.SketchEngine(cfg)
+        eng.update(keys, jnp.abs(vals))
+        eng.freeze()
+        eng.update_pass2(keys, jnp.abs(vals))
+        checkpoint.save(str(tmp_path), 2,
+                        {"state": eng.state, "pass2": eng.pass2})
+
+        fresh = E.SketchEngine(cfg)
+        fresh.freeze()
+        restored, _ = checkpoint.restore_latest(
+            str(tmp_path), {"state": fresh.state, "pass2": fresh.pass2})
+        fresh.state, fresh.pass2 = restored["state"], restored["pass2"]
+        a, b = eng.sample_exact(4), fresh.sample_exact(4)
+        assert np.array_equal(np.asarray(a.keys), np.asarray(b.keys))
+        assert np.array_equal(np.asarray(a.freqs), np.asarray(b.freqs))
+
+
 class TestStragglerWatchdog:
     def test_flags_outlier(self):
         w = StragglerWatchdog(threshold=2.0, warmup_steps=1)

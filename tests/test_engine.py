@@ -280,6 +280,47 @@ print("BUTTERFLY_OK")
                            capture_output=True, text=True, timeout=300)
         assert "BUTTERFLY_OK" in r.stdout, r.stderr[-2000:]
 
+    def _shard_states(self, seeds=(77, 77, 77, 77)):
+        rng = np.random.default_rng(2)
+        out = []
+        for i, ts in enumerate(seeds):
+            st = worp.onepass_init(3, 128, 32, 9, ts)
+            out.append(worp.onepass_update(
+                st, jnp.asarray(rng.integers(0, 900, 60), jnp.int32),
+                jnp.asarray(rng.normal(size=60).astype(np.float32)), 1.0))
+        return out
+
+    def test_butterfly_host_form_equals_tree_merge(self):
+        """The eager list form of butterfly_allmerge merges to the same
+        global state as the host tree (linear tables: exact up to fp)."""
+        sts = self._shard_states()
+        got = shd.butterfly_allmerge(sts, None, worp.onepass_merge)
+        want = shd.tree_merge(sts, worp.onepass_merge)
+        np.testing.assert_allclose(np.asarray(got.sketch.table),
+                                   np.asarray(want.sketch.table),
+                                   rtol=1e-5, atol=1e-5)
+        sg = worp.onepass_sample(got, 8, 1.0)
+        sw = worp.onepass_sample(want, 8, 1.0)
+        assert (set(np.asarray(sg.keys).tolist())
+                == set(np.asarray(sw.keys).tolist()))
+
+    def test_butterfly_rejects_seed_mismatch(self):
+        """Seed-mismatch rejection, matching the tree_merge guard: shards
+        hashed under different transform seeds are not shards of one
+        logical stream -- the butterfly must fail loudly, not merge
+        garbage."""
+        sts = self._shard_states(seeds=(77, 77, 78, 77))
+        with pytest.raises(ValueError, match="butterfly_allmerge.*seeds"):
+            shd.butterfly_allmerge(sts, None, worp.onepass_merge)
+        # same states through tree_merge: identical contract
+        with pytest.raises(ValueError, match="seeds"):
+            shd.tree_merge(sts, worp.onepass_merge)
+
+    def test_butterfly_host_form_rejects_ragged(self):
+        sts = self._shard_states(seeds=(77, 77, 77))
+        with pytest.raises(ValueError, match="power-of-two"):
+            shd.butterfly_allmerge(sts, None, worp.onepass_merge)
+
     def test_psum_sketch_single_device(self):
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P

@@ -135,3 +135,137 @@ class TestKernelCoreEquivalence:
         np.testing.assert_allclose(np.asarray(t_kernel),
                                    np.asarray(sk.table), rtol=2e-5,
                                    atol=2e-5)
+
+
+class TestBatchedKernelEdgeCases:
+    """Grid/padding edge cases for the BATCHED query + scatter kernels:
+    widths and batch sizes that do NOT divide the block sizes, all-padding
+    streams, and k == 1 key batches -- all bit-exact vs the ref.py oracles
+    (fp32 reduction-order tolerance on accumulated scatter tables)."""
+
+    # (B, width) pairs chosen so b_pad/w_pad require real padding and the
+    # grid has multiple blocks per axis under the small block sizes below.
+    RAGGED = [(1, 130), (5, 200), (10, 333), (13, 1025)]
+
+    def _streams(self, B, n, seed=0, hi=50_000):
+        rng = np.random.default_rng(seed)
+        keys = jnp.asarray(rng.integers(0, hi, (B, n)), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=(B, n)).astype(np.float32))
+        seeds = jnp.asarray(rng.integers(0, 2**31 - 1, B), jnp.uint32)
+        tseeds = jnp.asarray(rng.integers(0, 2**31 - 1, B), jnp.uint32)
+        return keys, vals, seeds, tseeds
+
+    @pytest.mark.parametrize("B,width", RAGGED)
+    def test_query_nonmultiple_blocks(self, B, width):
+        from repro.kernels.countsketch_query import countsketch_query_batched
+
+        rng = np.random.default_rng(B)
+        tables = jnp.asarray(
+            rng.normal(size=(B, 3, width)).astype(np.float32))
+        keys = jnp.asarray(rng.integers(0, 99_999, (B, 37)), jnp.int32)
+        seeds = jnp.asarray(rng.integers(0, 2**31 - 1, B), jnp.uint32)
+        out = countsketch_query_batched(tables, keys, seeds, block_w=128,
+                                        block_b=8, interpret=True)
+        want = ref.countsketch_query_batched_ref(tables, keys, seeds)
+        assert np.array_equal(np.asarray(out), np.asarray(want))
+
+    @pytest.mark.parametrize("B,width", RAGGED)
+    def test_scatter_nonmultiple_blocks(self, B, width):
+        from repro.kernels.countsketch_scatter import (
+            countsketch_scatter_batched)
+
+        keys, vals, seeds, tseeds = self._streams(B, 300, seed=B)
+        out = countsketch_scatter_batched(
+            keys, vals, 3, width, seeds, p=1.0, transform_seeds=tseeds,
+            block_n=128, block_w=128, block_b=8, interpret=True)
+        want = ref.countsketch_scatter_batched_ref(
+            keys, vals, 3, width, seeds, p=1.0, transform_seeds=tseeds)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_scatter_all_padding_stream(self):
+        """A stream whose keys are ALL -1 contributes an all-zero table; its
+        neighbors are unaffected."""
+        from repro.kernels.countsketch_scatter import (
+            countsketch_scatter_batched)
+
+        keys, vals, seeds, tseeds = self._streams(3, 200, seed=42)
+        keys = keys.at[1].set(-1)
+        out = countsketch_scatter_batched(
+            keys, vals, 3, 200, seeds, p=1.0, transform_seeds=tseeds,
+            block_n=128, block_w=128, interpret=True)
+        want = ref.countsketch_scatter_batched_ref(
+            keys, vals, 3, 200, seeds, p=1.0, transform_seeds=tseeds)
+        assert not np.asarray(out[1]).any()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_scatter_zero_lengths_stream(self):
+        """lengths[b] == 0 masks the whole stream even with live keys."""
+        from repro.kernels.countsketch_scatter import (
+            countsketch_scatter_batched)
+
+        keys, vals, seeds, tseeds = self._streams(3, 150, seed=7)
+        lengths = jnp.asarray([150, 0, 37], jnp.int32)
+        out = countsketch_scatter_batched(
+            keys, vals, 3, 256, seeds, p=1.0, transform_seeds=tseeds,
+            lengths=lengths, block_n=128, interpret=True)
+        want = ref.countsketch_scatter_batched_ref(
+            keys, vals, 3, 256, seeds, p=1.0, transform_seeds=tseeds,
+            lengths=lengths)
+        assert not np.asarray(out[1]).any()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_query_single_key(self):
+        """k == 1 sample queries (the smallest possible key batch)."""
+        from repro.kernels.countsketch_query import countsketch_query_batched
+
+        rng = np.random.default_rng(3)
+        tables = jnp.asarray(rng.normal(size=(5, 3, 777)).astype(np.float32))
+        keys = jnp.asarray(rng.integers(0, 99_999, (5, 1)), jnp.int32)
+        seeds = jnp.asarray(rng.integers(0, 2**31 - 1, 5), jnp.uint32)
+        out = countsketch_query_batched(tables, keys, seeds, block_w=256,
+                                        interpret=True)
+        want = ref.countsketch_query_batched_ref(tables, keys, seeds)
+        assert out.shape == (5, 3, 1)
+        assert np.array_equal(np.asarray(out), np.asarray(want))
+
+    def test_scatter_single_element(self):
+        """n == 1 scatter batches (one signed update per stream)."""
+        from repro.kernels.countsketch_scatter import (
+            countsketch_scatter_batched)
+
+        keys, vals, seeds, tseeds = self._streams(4, 1, seed=11)
+        out = countsketch_scatter_batched(
+            keys, vals, 5, 333, seeds, p=2.0, transform_seeds=tseeds,
+            interpret=True)
+        want = ref.countsketch_scatter_batched_ref(
+            keys, vals, 5, 333, seeds, p=2.0, transform_seeds=tseeds)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_onepass_sample_k1_through_engine(self):
+        """k == 1 WOR samples flow through the batched query chokepoint."""
+        from repro import engine as E
+
+        cfg = E.EngineConfig(num_streams=3, rows=3, width=130,
+                             candidates=8, p=1.0, seed=5)
+        rng = np.random.default_rng(5)
+        keys = jnp.asarray(rng.integers(0, 500, (3, 40)), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=(3, 40)).astype(np.float32))
+        st = E.onepass_update_batched(E.onepass_init_batched(cfg), keys,
+                                      vals, cfg.p)
+        s = E.onepass_sample_batched(st, 1, cfg.p)
+        assert s.keys.shape == (3, 1)
+        for b in range(3):
+            want = worp_onepass_sample_single(st, b, 1, cfg.p)
+            assert int(s.keys[b, 0]) == int(want.keys[0])
+
+
+def worp_onepass_sample_single(st, b, k, p):
+    import jax as _jax
+    from repro.core import worp
+
+    one = _jax.tree_util.tree_map(lambda x: x[b], st)
+    return worp.onepass_sample(one, k, p)
