@@ -1,6 +1,6 @@
 """SketchEngine throughput: batched multi-stream data plane vs Python loops.
 
-Five measurements (interpret-mode wall times on CPU; on TPU the same calls
+Six measurements (interpret-mode wall times on CPU; on TPU the same calls
 compile via Mosaic and the batched matmul additionally packs the MXU):
 
   * update kernel:  ONE batched pallas_call over B streams vs B single-stream
@@ -14,6 +14,13 @@ compile via Mosaic and the batched matmul additionally packs the MXU):
     single-stream query dispatches, with the same ref parity guard
   * vmap path:      registry-spec batched ``update`` vs a Python loop of
     single-stream spec updates (sparse keyed batches, the control plane)
+  * ingest planes:  async double-buffered ingest (``plane="async"``:
+    policy-coalesced dispatch on a worker thread) vs the sync sparse plane
+    flushing per microbatch (the freshness-oriented serving shape), plus a
+    ``FlushPolicy`` threshold sweep on the sync plane quantifying the
+    per-dispatch amortization.  Guards: the async plane's drained table is
+    BITWISE equal to the sync plane's under the same policy, and its
+    sample keys equal the per-microbatch reference
   * merge tree:     O(log B) ``reduce_streams`` collapse vs sequential merging
 
 CSV derived column reports the batched/looped ratio directly.
@@ -156,6 +163,65 @@ def run(verbose: bool = True, fast: bool = False):
                  f"batched_speedup={us_ql / us_qb:.2f}x"))
     rows.append((f"engine_query_ref_jnp_B{B_STREAMS}_k{C}", us_qr,
                  f"ref_over_kernel={us_qr / us_qb:.2f}x"))
+
+    # -- ingest data planes: async double-buffered vs sync sparse -----------
+    # Serving-shaped workload: a producer streams small turnstile
+    # microbatches (per-decode-step token batches).  The sync sparse plane
+    # at a per-microbatch flush threshold keeps the state fresh every step
+    # and pays the per-dispatch overhead each time; the async plane
+    # double-buffers -- microbatches accumulate to the policy threshold and
+    # dispatch coalesced on the worker thread, overlapping producer
+    # accumulation with in-flight execution.  The FlushPolicy sweep rows
+    # quantify the amortization curve on the sync plane alone.
+    micro = 128
+    nmicro = (2048 if fast else 4096) // micro
+    icfg = E.EngineConfig(num_streams=B_STREAMS, rows=3, width=1024,
+                          candidates=128, p=1.0, seed=5)
+    # skewed token traffic (Zipf): heavy keys dominate, so the WOR top-k is
+    # robust to dispatch batching and the cross-threshold guard below is
+    # meaningful
+    mk = [np.asarray(np.minimum(rng.zipf(1.5, (B_STREAMS, micro)) - 1, 4095),
+                     np.int32) for _ in range(nmicro)]
+    mv = [np.ones((B_STREAMS, micro), np.float32) for _ in range(nmicro)]
+    coalesce = micro * nmicro // 2  # two dispatches per run
+
+    def ingest_pipeline(plane, flush_elems):
+        eng = E.SketchEngine(icfg, plane=plane, flush_elems=flush_elems)
+        for j in range(nmicro):
+            eng.ingest(mk[j], mv[j])
+        eng.flush()
+        return eng
+
+    # parity guards: same policy => the async plane's drained state is
+    # BITWISE equal to the sync plane's (policy-determined dispatch
+    # boundaries, timing-free); across thresholds the coalesced sample
+    # keys still equal the per-microbatch reference (batching robustness)
+    sync_ref = ingest_pipeline("sparse", coalesce)
+    async_ref = ingest_pipeline("async", coalesce)
+    if not np.array_equal(np.asarray(sync_ref.state.sketch.table),
+                          np.asarray(async_ref.state.sketch.table)):
+        raise AssertionError("async plane drifted from sync sparse plane "
+                             "under the same FlushPolicy (must be bitwise)")
+    perbatch_ref = ingest_pipeline("sparse", micro)
+    s_coal = async_ref.sample(16)
+    s_per = perbatch_ref.sample(16)
+    if not np.array_equal(np.asarray(s_coal.keys), np.asarray(s_per.keys)):
+        raise AssertionError("coalesced ingest changed the WOR sample keys "
+                             "vs the per-microbatch reference")
+
+    total = B_STREAMS * micro * nmicro
+    us_per = timeit(lambda: ingest_pipeline("sparse", micro))
+    rows.append((f"engine_ingest_sync_perbatch_B{B_STREAMS}_m{micro}",
+                 us_per, f"ns_per_elem={us_per * 1e3 / total:.2f}"))
+    for thresh in (4 * micro, coalesce):  # FlushPolicy threshold sweep
+        us_t = timeit(lambda: ingest_pipeline("sparse", thresh))
+        rows.append((f"engine_ingest_sync_flush{thresh}_B{B_STREAMS}", us_t,
+                     f"amortization={us_per / us_t:.2f}x"))
+    us_async = timeit(lambda: ingest_pipeline("async", coalesce))
+    rows.append((f"engine_ingest_async_flush{coalesce}_B{B_STREAMS}",
+                 us_async,
+                 f"async_ingest_speedup={us_per / us_async:.2f}x "
+                 f"parity=bitwise"))
 
     # -- merge tree: log-depth stream collapse vs sequential ----------------
     mcfg = E.EngineConfig(num_streams=B_STREAMS, rows=5, width=31 * 32,

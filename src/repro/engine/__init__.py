@@ -4,10 +4,10 @@ The engine layer turns the single-stream sampler specs in
 ``repro.core.sampler`` into a production data plane: vmapped
 update/estimate/sample over a leading stream axis for ANY registered
 sampler, batched Pallas fast paths for one-pass WORp (one ``pallas_call``
-for all B streams on both the update and the query plane), a turnstile
-sparse-ingest plane (``SketchEngine.ingest`` buffers signed (key, +-value)
-microbatches and flushes them through one batched scatter kernel for every
-sketch-backed sampler), and log-depth merge trees (host-side and
+for all B streams on both the update and the query plane), a first-class
+DataPlane layer (``repro.engine.planes``: dense vmapped / synchronous
+batched-scatter / double-buffered async ingest, selected per engine with a
+pluggable ``FlushPolicy``), and log-depth merge trees (host-side and
 in-shard_map) for collapsing shards into global state.
 """
 from .engine import (  # noqa: F401
@@ -17,23 +17,33 @@ from .engine import (  # noqa: F401
     batched_ops,
     derive_stream_seeds,
     engine_spec,
-    ingest_sparse,
     init_batched,
     onepass_init_batched,
     onepass_merge_batched,
     onepass_sample_batched,
     onepass_update_batched,
     onepass_update_dense,
-    onepass_update_sparse,
     reduce_streams,
-    register_frozen_sketch,
-    register_sparse_path,
     sampler_config,
-    tv_update_sparse,
-    twopass_update_from_priorities_batched,
     twopass_init_batched,
     twopass_merge_batched,
-    twopass_run_update_sparse,
     twopass_sample_batched,
     twopass_update_batched,
+)
+from .planes import (  # noqa: F401
+    AsyncPlane,
+    DataPlane,
+    DensePlane,
+    FlushPolicy,
+    SparsePlane,
+    available_planes,
+    ingest_sparse,
+    make_plane,
+    onepass_update_sparse,
+    register_frozen_sketch,
+    register_plane,
+    register_sparse_path,
+    tv_update_sparse,
+    twopass_run_update_sparse,
+    twopass_update_from_priorities_batched,
 )

@@ -26,6 +26,13 @@ segments through the batched Pallas update kernel
 the dense-update candidate refresh -- goes through
 ``kernels.ops.estimate_batched``, which dispatches ONE batched Pallas query
 kernel on TPU and the bit-identical jnp oracle elsewhere.
+
+Turnstile ingest is a first-class DATA-PLANE layer (``repro.engine.planes``):
+``SketchEngine(cfg, plane="dense"|"sparse"|"async", flush=FlushPolicy(...))``
+selects how host-side microbatches reach the state -- the vmapped-jnp
+reference plane, the synchronous batched Pallas scatter plane, or the
+double-buffered asynchronous plane (worker-thread dispatch, bit-identical
+drained state under the same flush policy).
 """
 from __future__ import annotations
 
@@ -36,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import countsketch, hashing, transforms, tv_sampler, worp
+from repro.core import countsketch, hashing, transforms, worp
 from repro.core import sampler as core_sampler
 from repro.core.perfect import Sample
 from repro.core.sampler import SamplerSpec
@@ -244,152 +251,16 @@ def _refresh_candidates(sk: countsketch.CountSketch, cand_keys, batch_keys,
 
 
 # ---------------------------------------------------------------------------
-# turnstile sparse data plane: signed (key, +-value) batches through the
-# batched Pallas scatter kernel (one pallas_call for all B streams)
+# data planes: the turnstile sparse/async ingest machinery lives in
+# ``repro.engine.planes`` (DataPlane protocol + registry + the sampler-name
+# sparse kernel paths).  ``planes`` imports this module for ``batched_ops``
+# and ``_refresh_candidates``, so the import here must stay lazy.
 # ---------------------------------------------------------------------------
 
-# Sparse kernel paths by sampler name, mirroring the core sampler registry:
-# a new sketch-backed sampler opts into the scatter-kernel ingest plane with
-# ``@register_sparse_path("myname")`` (uniform signature
-# ``fn(state, keys, values, p, scheme, *, interpret, use_kernel)``) instead
-# of editing the engine; unregistered samplers fall back to the vmapped
-# spec update in ``ingest_sparse``.  ``register_frozen_sketch`` likewise
-# exposes the pass-II frozen CountSketch for the batched-priority path.
-_SPARSE_PATHS: dict = {}
-_FROZEN_SKETCH: dict = {}
+def _planes():
+    from repro.engine import planes
 
-
-def register_sparse_path(name: str):
-    def deco(fn):
-        _SPARSE_PATHS[name] = fn
-        return fn
-
-    return deco
-
-
-def register_frozen_sketch(name: str):
-    def deco(fn):
-        _FROZEN_SKETCH[name] = fn
-        return fn
-
-    return deco
-
-
-register_frozen_sketch("onepass")(lambda st: st.sketch)
-register_frozen_sketch("twopass")(lambda st: st.pass1.sketch)
-
-
-@register_sparse_path("onepass")
-@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
-                                             "use_kernel"))
-def onepass_update_sparse(st: worp.OnePassState, keys: jnp.ndarray,
-                          values: jnp.ndarray, p: float,
-                          scheme: str = transforms.PPSWOR,
-                          interpret: Optional[bool] = None,
-                          use_kernel: Optional[bool] = None):
-    """Turnstile fast path: B sparse signed batches through ONE scatter
-    pallas_call (``kernels.countsketch_scatter_batched``).
-
-    ``(keys[b, i], values[b, i])`` is an arbitrary signed update of stream b
-    (negative values are deletions); ``keys == -1`` slots are padding.  The
-    candidate refresh then queries (C + n) per-stream keys through the
-    batched estimate chokepoint.  Semantically identical to the vmapped jnp
-    ``onepass_update`` with the same batch (padding slots carry value 0
-    there), up to fp reduction order.
-    """
-    keys = jnp.asarray(keys, jnp.int32)
-    delta = ops.sketch_sparse_batch(
-        keys, values.astype(jnp.float32), st.sketch.table.shape[1],
-        st.sketch.table.shape[2], st.sketch.seed, p=p, scheme=scheme,
-        transform_seeds=st.seed_transform, interpret=interpret)
-    sk = countsketch.CountSketch(table=st.sketch.table + delta,
-                                 seed=st.sketch.seed)
-    cand = _refresh_candidates(sk, st.cand_keys, keys,
-                               use_kernel=use_kernel, interpret=interpret)
-    return worp.OnePassState(sketch=sk, cand_keys=cand,
-                             seed_transform=st.seed_transform)
-
-
-@jax.jit
-def twopass_update_from_priorities_batched(st2, keys, values, prio):
-    """vmapped ``worp.twopass_update_from_priorities``: one compiled call
-    updates all B pass-II buffers from precomputed (B, n) priorities."""
-    return jax.vmap(worp.twopass_update_from_priorities)(st2, keys, values,
-                                                         prio)
-
-
-@register_sparse_path("twopass")
-@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
-                                             "use_kernel"))
-def twopass_run_update_sparse(st, keys: jnp.ndarray, values: jnp.ndarray,
-                              p: float, scheme: str = transforms.PPSWOR,
-                              interpret: Optional[bool] = None,
-                              use_kernel: Optional[bool] = None):
-    """Sparse kernel path for the streaming "twopass" sampler state
-    (``core.sampler.TwoPassRunState``): pass I goes through the scatter
-    kernel; the pass-II buffer gets its online priorities from the batched
-    query chokepoint and updates via the vmapped from-priorities seam."""
-    keys = jnp.asarray(keys, jnp.int32)
-    p1 = onepass_update_sparse(st.pass1, keys, values, p, scheme,
-                               interpret=interpret, use_kernel=use_kernel)
-    prio = ops.estimate_batched(p1.sketch.table, keys, p1.sketch.seed,
-                                use_kernel=use_kernel, interpret=interpret)
-    p2 = twopass_update_from_priorities_batched(st.pass2, keys, values, prio)
-    return core_sampler.TwoPassRunState(pass1=p1, pass2=p2)
-
-
-@register_sparse_path("tv")
-@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
-                                             "use_kernel"))
-def tv_update_sparse(st, keys: jnp.ndarray, values: jnp.ndarray, p: float,
-                     scheme: str = transforms.PPSWOR,
-                     interpret: Optional[bool] = None,
-                     use_kernel: Optional[bool] = None):
-    """Sparse kernel path for the batched TV cascade: the B*r cascade
-    sketches (each with its own hash + transform seed) flatten into ONE
-    scatter pallas_call, their candidate refresh into one batched query
-    dispatch, and the rHH sketch rides the one-pass sparse path."""
-    keys = jnp.asarray(keys, jnp.int32)
-    values = values.astype(jnp.float32)
-    B, r = st.transform_seeds.shape
-    rows, width = st.sketches.table.shape[-2:]
-    C = st.cand_keys.shape[-1]
-
-    flat_seeds = st.sketches.seed.reshape(B * r)
-    flat_tseeds = st.transform_seeds.reshape(B * r)
-    keys_f = jnp.repeat(keys, r, axis=0)      # (B*r, n): stream b feeds all
-    vals_f = jnp.repeat(values, r, axis=0)    # r of its cascade samplers
-    delta = ops.sketch_sparse_batch(
-        keys_f, vals_f, rows, width, flat_seeds, p=p, scheme=scheme,
-        transform_seeds=flat_tseeds, interpret=interpret)
-    tables = st.sketches.table.reshape(B * r, rows, width) + delta
-    flat_sk = countsketch.CountSketch(table=tables, seed=flat_seeds)
-    cand = _refresh_candidates(flat_sk, st.cand_keys.reshape(B * r, C),
-                               keys_f, use_kernel=use_kernel,
-                               interpret=interpret)
-    return tv_sampler.TVSamplerState(
-        sketches=countsketch.CountSketch(
-            table=tables.reshape(B, r, rows, width), seed=st.sketches.seed),
-        cand_keys=cand.reshape(B, r, C),
-        transform_seeds=st.transform_seeds,
-        rhh=onepass_update_sparse(st.rhh, keys, values, p, scheme,
-                                  interpret=interpret,
-                                  use_kernel=use_kernel))
-
-
-def ingest_sparse(spec: SamplerSpec, state, keys, values,
-                  interpret: Optional[bool] = None,
-                  use_kernel: Optional[bool] = None):
-    """Route one batched sparse signed update through the sampler's kernel
-    path: every sketch-backed sampler (onepass, twopass pass-I/II, tv)
-    dispatches the batched Pallas scatter kernel via ``_SPARSE_PATHS``;
-    unregistered samplers (perfect: no sketch) fall back to the vmapped
-    spec update with identical semantics."""
-    path = _SPARSE_PATHS.get(spec.name)
-    if path is None:
-        return batched_ops(spec).update(state, keys, values)
-    return path(state, keys, values, spec.cfg.p, spec.cfg.scheme,
-                interpret=interpret, use_kernel=use_kernel)
+    return planes
 
 
 # ---------------------------------------------------------------------------
@@ -465,28 +336,36 @@ class SketchEngine:
     Thin object shell over the functional batched ops above -- all state is
     jax pytrees, so an engine can live inside jit/scan via its ``.state``.
 
-    Turnstile ingest: ``ingest(keys, values)`` buffers sparse signed
-    microbatches host-side (numpy, zero device work) and ``flush()`` pushes
-    the whole buffer through ONE batched Pallas scatter dispatch per
-    sketch-backed sampler (``ingest_sparse``).  Buffers auto-flush when
-    they reach ``flush_elems`` per-stream elements and before any read or
-    state-mixing operation (sample/estimate/merge/freeze/collapse), so the
-    visible state is always up to date.
+    Data plane: ``plane=`` picks how turnstile microbatches reach the state
+    (``repro.engine.planes`` registry).  ``ingest(keys, values)`` buffers
+    sparse signed microbatches host-side (numpy, zero device work) and the
+    plane's ``FlushPolicy`` (element count / byte budget / interval;
+    ``flush=FlushPolicy(...)`` or the ``flush_elems`` shorthand) decides
+    when they dispatch: the default ``"sparse"`` plane pushes the whole
+    buffer through ONE batched Pallas scatter dispatch per sketch-backed
+    sampler inline, ``"async"`` double-buffers the dispatch on a worker
+    thread (bit-identical drained state under the same policy), and
+    ``"dense"`` is the vmapped-jnp reference plane.  Every read or
+    state-mixing operation (update/sample/estimate/merge/freeze/collapse)
+    drains the plane first, so the visible state is always up to date and
+    deterministic.
     """
 
     def __init__(self, cfg: EngineConfig, sampler: Optional[str] = None,
-                 flush_elems: int = 4096):
+                 flush_elems: int = 4096, plane: str = "sparse",
+                 flush=None):
         if sampler is not None and sampler != cfg.sampler:
             cfg = cfg._replace(sampler=sampler)
         self.cfg = cfg
         self.spec = engine_spec(cfg)
         self.ops = batched_ops(self.spec)
-        self.state = self.ops.init(*derive_stream_seeds(cfg))
+        planes = _planes()
+        policy = flush if flush is not None \
+            else planes.FlushPolicy(max_elems=int(flush_elems))
+        self._plane = planes.make_plane(
+            plane, self.spec, self.ops.init(*derive_stream_seeds(cfg)),
+            policy=policy)
         self.pass2 = None
-        self.flush_elems = int(flush_elems)
-        self._buf_keys: list = []
-        self._buf_vals: list = []
-        self._buf_n = 0
 
     @property
     def num_streams(self) -> int:
@@ -496,9 +375,30 @@ class SketchEngine:
     def sampler(self) -> str:
         return self.cfg.sampler
 
+    @property
+    def plane(self):
+        """The engine's DataPlane instance (see ``repro.engine.planes``)."""
+        return self._plane
+
+    @property
+    def state(self):
+        """The settled batched sampler state.  In-flight async dispatches
+        complete first; microbatches still in the HOST buffer stay pending
+        (``flush()`` applies them)."""
+        return self._plane.state
+
+    @state.setter
+    def state(self, st):
+        self._plane.set_state(st)
+
     # -- pass I -------------------------------------------------------------
     def update(self, keys, values):
-        """Sparse element batches: keys/values (B, n) int32/float32."""
+        """Sparse element batches: keys/values (B, n) int32/float32.
+
+        Any pending ingest buffer drains FIRST: interleaving ``ingest`` and
+        ``update`` applies the elements in call order, so ingest -> update
+        -> sample equals the aggregated-stream oracle regardless of how the
+        stream was split across the two entry points."""
         self.flush()
         self.state = self.ops.update(self.state, keys, values)
         return self
@@ -507,10 +407,10 @@ class SketchEngine:
         """Buffer a sparse signed (B, n) turnstile microbatch.
 
         Negative values are deletions; ``keys == -1`` slots are padding.
-        Microbatches accumulate host-side and flush through ONE batched
-        scatter-kernel dispatch once ``flush_elems`` per-stream elements
-        are pending (or on the next read/flush).  Ingesting a batch and
-        later its negation returns the sketch exactly to zero (linearity).
+        Microbatches accumulate host-side and dispatch through the engine's
+        data plane when its FlushPolicy fires (or on the next read/flush).
+        Ingesting a batch and later its negation returns the sketch exactly
+        to zero (linearity).
         """
         keys = np.asarray(keys, np.int32)
         values = np.asarray(values, np.float32)
@@ -519,32 +419,18 @@ class SketchEngine:
             raise ValueError(
                 f"ingest: keys/values must both be (num_streams={self.cfg.num_streams}, n), "
                 f"got {keys.shape} / {values.shape}")
-        self._buf_keys.append(keys)
-        self._buf_vals.append(values)
-        self._buf_n += keys.shape[1]
-        if self._buf_n >= self.flush_elems:
-            self.flush()
+        self._plane.ingest(keys, values)
         return self
 
     @property
     def pending(self) -> int:
         """Per-stream element count currently buffered (not yet flushed)."""
-        return self._buf_n
+        return self._plane.pending
 
     def flush(self, interpret=None, use_kernel=None):
-        """Push all buffered turnstile microbatches through one batched
-        scatter-kernel dispatch (``ingest_sparse``); no-op when empty."""
-        if not self._buf_keys:
-            return self
-        keys = jnp.asarray(np.concatenate(self._buf_keys, axis=1))
-        vals = jnp.asarray(np.concatenate(self._buf_vals, axis=1))
-        self.state = ingest_sparse(self.spec, self.state, keys, vals,
-                                   interpret=interpret,
-                                   use_kernel=use_kernel)
-        # clear only after a successful dispatch: a failed flush (OOM,
-        # trace error) leaves the buffer intact for retry instead of
-        # silently dropping the microbatches
-        self._buf_keys, self._buf_vals, self._buf_n = [], [], 0
+        """Drain the data plane: flush buffered turnstile microbatches and
+        settle any in-flight async dispatches; no-op when nothing pends."""
+        self._plane.drain(interpret=interpret, use_kernel=use_kernel)
         return self
 
     def update_dense(self, values, base_keys=None, lengths=None,
@@ -593,11 +479,17 @@ class SketchEngine:
 
     def sample(self, k: int) -> Sample:
         self.flush()
+        return self.sample_state(self.state, k)
+
+    def sample_state(self, state, k: int) -> Sample:
+        """Per-stream WOR samples of an ARBITRARY batched state of this
+        engine's sampler (e.g. a cross-worker merge result) -- the same
+        dispatch as ``sample`` without touching the engine's own state."""
         if self.cfg.sampler == "onepass":
             # batched query-kernel path (one dispatch for all B streams)
-            return onepass_sample_batched(self.state, k, self.cfg.p,
+            return onepass_sample_batched(state, k, self.cfg.p,
                                           self.cfg.scheme)
-        return self.ops.sample(self.state, k=k)
+        return self.ops.sample(state, k=k)
 
     def estimate(self, keys) -> jnp.ndarray:
         """Per-stream transformed-domain estimates for (B, n) keys."""
@@ -622,7 +514,7 @@ class SketchEngine:
         """The batched frozen pass-I CountSketch backing pass-II priorities
         (None for samplers that registered no ``register_frozen_sketch``
         accessor)."""
-        getter = _FROZEN_SKETCH.get(self.cfg.sampler)
+        getter = _planes().frozen_sketch_getter(self.cfg.sampler)
         return getter(self.state) if getter is not None else None
 
     def update_pass2(self, keys, values):
@@ -635,7 +527,7 @@ class SketchEngine:
             prio = ops.estimate_batched(frozen.table,
                                         jnp.asarray(keys, jnp.int32),
                                         frozen.seed)
-            self.pass2 = twopass_update_from_priorities_batched(
+            self.pass2 = _planes().twopass_update_from_priorities_batched(
                 self.pass2, jnp.asarray(keys, jnp.int32),
                 jnp.asarray(values, jnp.float32), prio)
         else:

@@ -1,0 +1,587 @@
+"""First-class data planes: how element batches reach sampler state.
+
+The paper's composability makes the *state* of a sampler a pure pytree and
+its transitions pure functions; a **data plane** is the policy for moving a
+host-side stream of turnstile microbatches into that state.  Every plane
+shares one host buffer discipline -- sparse signed ``(keys, values)``
+microbatches accumulate as numpy arrays (zero device work) until a
+``FlushPolicy`` fires -- and they differ only in the dispatch step:
+
+  ``DensePlane``   vmapped registry-spec update (the pure-jnp reference
+                   plane; ``batched_ops(spec).update`` on the concatenated
+                   batch).
+  ``SparsePlane``  the batched Pallas scatter path: ``ingest_sparse``
+                   routes every sketch-backed sampler through ONE
+                   ``countsketch_scatter_batched`` pallas_call (the
+                   sampler-name registry below), falling back to the
+                   vmapped update for samplers with no sketch.  Dispatch
+                   happens inline at the flush boundary (synchronous: the
+                   caller observes errors at the flush site).
+  ``AsyncPlane``   double-buffered ingest: flush batches are handed to a
+                   single worker thread which dispatches and MATERIALIZES
+                   them (one batch in flight while the producer
+                   accumulates the next; a bounded job queue gives
+                   backpressure at depth 2).  Dispatch boundaries are
+                   decided by the FlushPolicy on the producer side, so
+                   they are timing-independent: under the same policy and
+                   microbatch stream the async plane performs the exact
+                   same dispatch sequence as ``SparsePlane`` and its
+                   drained state/samples are BIT-IDENTICAL.  ``drain()``
+                   waits for in-flight work and flushes the tail, so any
+                   read/merge/checkpoint sees a deterministic state.
+
+``FlushPolicy`` is the pluggable flush threshold: element count
+(``max_elems``), byte budget (``max_bytes``), and/or wall-clock interval
+(``max_interval``; note the interval trigger is inherently
+timing-DEPENDENT and therefore trades away the bitwise-reproducibility of
+the element/byte triggers).
+
+Planes are registered by name (``register_plane`` / ``make_plane`` /
+``available_planes``) so the engine, the serving launcher (``serve
+--plane``), the conformance harness (``repro.validate.empirics``
+parametrizes its trial runners over this registry), and the benchmarks all
+select planes without naming classes.  ``"ingest"`` is kept as an alias of
+``"sparse"`` (the pre-plane name of the scatter path in the conformance
+grid).
+"""
+from __future__ import annotations
+
+import atexit
+import functools
+import queue
+import threading
+import time
+import weakref
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import countsketch, tv_sampler, worp
+from repro.core import sampler as core_sampler
+from repro.core import transforms
+from repro.core.sampler import SamplerSpec
+from repro.engine.engine import _refresh_candidates, batched_ops
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# sparse kernel paths by sampler name (mirrors the core sampler registry):
+# a new sketch-backed sampler opts into the scatter-kernel ingest plane with
+# ``@register_sparse_path("myname")`` (uniform signature
+# ``fn(state, keys, values, p, scheme, *, interpret, use_kernel)``) instead
+# of editing the engine; unregistered samplers fall back to the vmapped
+# spec update in ``ingest_sparse``.  ``register_frozen_sketch`` likewise
+# exposes the pass-II frozen CountSketch for the batched-priority path.
+# ---------------------------------------------------------------------------
+
+_SPARSE_PATHS: dict = {}
+_FROZEN_SKETCH: dict = {}
+
+
+def register_sparse_path(name: str):
+    def deco(fn):
+        _SPARSE_PATHS[name] = fn
+        return fn
+
+    return deco
+
+
+def register_frozen_sketch(name: str):
+    def deco(fn):
+        _FROZEN_SKETCH[name] = fn
+        return fn
+
+    return deco
+
+
+register_frozen_sketch("onepass")(lambda st: st.sketch)
+register_frozen_sketch("twopass")(lambda st: st.pass1.sketch)
+
+
+def frozen_sketch_getter(name: str):
+    """The registered frozen pass-I sketch accessor for ``name`` (None when
+    the sampler registered none)."""
+    return _FROZEN_SKETCH.get(name)
+
+
+@register_sparse_path("onepass")
+@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
+                                             "use_kernel"))
+def onepass_update_sparse(st: worp.OnePassState, keys: jnp.ndarray,
+                          values: jnp.ndarray, p: float,
+                          scheme: str = transforms.PPSWOR,
+                          interpret: Optional[bool] = None,
+                          use_kernel: Optional[bool] = None):
+    """Turnstile fast path: B sparse signed batches through ONE scatter
+    pallas_call (``kernels.countsketch_scatter_batched``).
+
+    ``(keys[b, i], values[b, i])`` is an arbitrary signed update of stream b
+    (negative values are deletions); ``keys == -1`` slots are padding.  The
+    candidate refresh then queries (C + n) per-stream keys through the
+    batched estimate chokepoint.  Semantically identical to the vmapped jnp
+    ``onepass_update`` with the same batch (padding slots carry value 0
+    there), up to fp reduction order.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    delta = ops.sketch_sparse_batch(
+        keys, values.astype(jnp.float32), st.sketch.table.shape[1],
+        st.sketch.table.shape[2], st.sketch.seed, p=p, scheme=scheme,
+        transform_seeds=st.seed_transform, interpret=interpret)
+    sk = countsketch.CountSketch(table=st.sketch.table + delta,
+                                 seed=st.sketch.seed)
+    cand = _refresh_candidates(sk, st.cand_keys, keys,
+                               use_kernel=use_kernel, interpret=interpret)
+    return worp.OnePassState(sketch=sk, cand_keys=cand,
+                             seed_transform=st.seed_transform)
+
+
+@jax.jit
+def twopass_update_from_priorities_batched(st2, keys, values, prio):
+    """vmapped ``worp.twopass_update_from_priorities``: one compiled call
+    updates all B pass-II buffers from precomputed (B, n) priorities."""
+    return jax.vmap(worp.twopass_update_from_priorities)(st2, keys, values,
+                                                         prio)
+
+
+@register_sparse_path("twopass")
+@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
+                                             "use_kernel"))
+def twopass_run_update_sparse(st, keys: jnp.ndarray, values: jnp.ndarray,
+                              p: float, scheme: str = transforms.PPSWOR,
+                              interpret: Optional[bool] = None,
+                              use_kernel: Optional[bool] = None):
+    """Sparse kernel path for the streaming "twopass" sampler state
+    (``core.sampler.TwoPassRunState``): pass I goes through the scatter
+    kernel; the pass-II buffer gets its online priorities from the batched
+    query chokepoint and updates via the vmapped from-priorities seam."""
+    keys = jnp.asarray(keys, jnp.int32)
+    p1 = onepass_update_sparse(st.pass1, keys, values, p, scheme,
+                               interpret=interpret, use_kernel=use_kernel)
+    prio = ops.estimate_batched(p1.sketch.table, keys, p1.sketch.seed,
+                                use_kernel=use_kernel, interpret=interpret)
+    p2 = twopass_update_from_priorities_batched(st.pass2, keys, values, prio)
+    return core_sampler.TwoPassRunState(pass1=p1, pass2=p2)
+
+
+@register_sparse_path("tv")
+@functools.partial(jax.jit, static_argnames=("p", "scheme", "interpret",
+                                             "use_kernel"))
+def tv_update_sparse(st, keys: jnp.ndarray, values: jnp.ndarray, p: float,
+                     scheme: str = transforms.PPSWOR,
+                     interpret: Optional[bool] = None,
+                     use_kernel: Optional[bool] = None):
+    """Sparse kernel path for the batched TV cascade: the B*r cascade
+    sketches (each with its own hash + transform seed) flatten into ONE
+    scatter pallas_call, their candidate refresh into one batched query
+    dispatch, and the rHH sketch rides the one-pass sparse path."""
+    keys = jnp.asarray(keys, jnp.int32)
+    values = values.astype(jnp.float32)
+    B, r = st.transform_seeds.shape
+    rows, width = st.sketches.table.shape[-2:]
+    C = st.cand_keys.shape[-1]
+
+    flat_seeds = st.sketches.seed.reshape(B * r)
+    flat_tseeds = st.transform_seeds.reshape(B * r)
+    keys_f = jnp.repeat(keys, r, axis=0)      # (B*r, n): stream b feeds all
+    vals_f = jnp.repeat(values, r, axis=0)    # r of its cascade samplers
+    delta = ops.sketch_sparse_batch(
+        keys_f, vals_f, rows, width, flat_seeds, p=p, scheme=scheme,
+        transform_seeds=flat_tseeds, interpret=interpret)
+    tables = st.sketches.table.reshape(B * r, rows, width) + delta
+    flat_sk = countsketch.CountSketch(table=tables, seed=flat_seeds)
+    cand = _refresh_candidates(flat_sk, st.cand_keys.reshape(B * r, C),
+                               keys_f, use_kernel=use_kernel,
+                               interpret=interpret)
+    return tv_sampler.TVSamplerState(
+        sketches=countsketch.CountSketch(
+            table=tables.reshape(B, r, rows, width), seed=st.sketches.seed),
+        cand_keys=cand.reshape(B, r, C),
+        transform_seeds=st.transform_seeds,
+        rhh=onepass_update_sparse(st.rhh, keys, values, p, scheme,
+                                  interpret=interpret,
+                                  use_kernel=use_kernel))
+
+
+def ingest_sparse(spec: SamplerSpec, state, keys, values,
+                  interpret: Optional[bool] = None,
+                  use_kernel: Optional[bool] = None):
+    """Route one batched sparse signed update through the sampler's kernel
+    path: every sketch-backed sampler (onepass, twopass pass-I/II, tv)
+    dispatches the batched Pallas scatter kernel via ``_SPARSE_PATHS``;
+    unregistered samplers (perfect: no sketch) fall back to the vmapped
+    spec update with identical semantics."""
+    path = _SPARSE_PATHS.get(spec.name)
+    if path is None:
+        return batched_ops(spec).update(state, keys, values)
+    return path(state, keys, values, spec.cfg.p, spec.cfg.scheme,
+                interpret=interpret, use_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# flush policy
+# ---------------------------------------------------------------------------
+
+class FlushPolicy(NamedTuple):
+    """When does the host buffer dispatch?  Any trigger that is not None
+    fires the flush once reached; the element and byte triggers depend only
+    on the ingested data (timing-independent, hence bitwise-reproducible
+    dispatch boundaries), while ``max_interval`` (seconds since the oldest
+    pending microbatch) is wall-clock and trades that reproducibility for
+    age-bounded batches.  Triggers are evaluated AT INGEST TIME -- there is
+    no standalone timer thread, so an interval-aged buffer dispatches on
+    the next ``ingest`` (or any read, which always drains); a producer
+    that goes fully idle must ``drain()``/read to publish its tail."""
+
+    max_elems: Optional[int] = 4096   # per-stream pending element count
+    max_bytes: Optional[int] = None   # pending host-buffer bytes (keys+vals)
+    max_interval: Optional[float] = None  # seconds since first pending batch
+
+    def should_flush(self, elems: int, nbytes: int, age: float) -> bool:
+        if self.max_elems is not None and elems >= self.max_elems:
+            return True
+        if self.max_bytes is not None and nbytes >= self.max_bytes:
+            return True
+        if self.max_interval is not None and age >= self.max_interval:
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# plane registry
+# ---------------------------------------------------------------------------
+
+_PLANES: dict = {}
+
+
+def register_plane(name: str, *aliases: str):
+    """Register a DataPlane subclass under ``name`` (+ optional aliases)."""
+
+    def deco(cls):
+        cls.name = name
+        for key in (name, *aliases):
+            _PLANES[key] = cls
+        return cls
+
+    return deco
+
+
+def available_planes() -> tuple:
+    """Canonical plane names (aliases excluded), registration order."""
+    seen = []
+    for cls in _PLANES.values():
+        if cls.name not in seen:
+            seen.append(cls.name)
+    return tuple(seen)
+
+
+def make_plane(name: str, spec: SamplerSpec, state,
+               policy: Optional[FlushPolicy] = None,
+               interpret: Optional[bool] = None,
+               use_kernel: Optional[bool] = None) -> "DataPlane":
+    """Instantiate a registered plane over ``spec`` and its batched state."""
+    cls = _PLANES.get(name)
+    if cls is None:
+        raise ValueError(f"unknown data plane {name!r}; registered planes: "
+                         f"{sorted(set(_PLANES))}")
+    return cls(spec, state, policy=policy, interpret=interpret,
+               use_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# the planes
+# ---------------------------------------------------------------------------
+
+class DataPlane:
+    """Shared host-buffer discipline; subclasses define ``_dispatch``.
+
+    The plane OWNS the batched sampler state while ingest is in progress:
+    ``state`` settles any in-flight work (async) before returning but does
+    NOT flush the host buffer -- ``drain()`` does both, and is what every
+    read/merge/checkpoint boundary must call (``SketchEngine`` does).
+    """
+
+    name = "abstract"
+
+    def __init__(self, spec: SamplerSpec, state,
+                 policy: Optional[FlushPolicy] = None,
+                 interpret: Optional[bool] = None,
+                 use_kernel: Optional[bool] = None):
+        self.spec = spec
+        self.policy = policy if policy is not None else FlushPolicy()
+        self._state = state
+        self._interpret = interpret
+        self._use_kernel = use_kernel
+        self._buf_keys: list = []
+        self._buf_vals: list = []
+        self._buf_elems = 0
+        self._buf_bytes = 0
+        self._buf_t0: Optional[float] = None
+
+    # -- dispatch hook ------------------------------------------------------
+    def _dispatch(self, state, keys, values, interpret, use_kernel):
+        raise NotImplementedError
+
+    # -- host buffer --------------------------------------------------------
+    def ingest(self, keys, values):
+        """Buffer one sparse signed (B, n) microbatch; dispatch when the
+        flush policy fires.  Shape/stream-count validation is the caller's
+        (the engine's) job -- planes only require keys.shape == values.shape."""
+        keys = np.asarray(keys, np.int32)
+        values = np.asarray(values, np.float32)
+        self._buf_keys.append(keys)
+        self._buf_vals.append(values)
+        self._buf_elems += keys.shape[1]
+        self._buf_bytes += keys.nbytes + values.nbytes
+        if self._buf_t0 is None:
+            self._buf_t0 = time.monotonic()
+        if self.policy.should_flush(self._buf_elems, self._buf_bytes,
+                                    time.monotonic() - self._buf_t0):
+            self._flush_buffer()
+        return self
+
+    @property
+    def pending(self) -> int:
+        """Per-stream element count buffered host-side (submitted/in-flight
+        async batches are no longer pending -- ``drain`` settles those)."""
+        return self._buf_elems
+
+    @property
+    def pending_bytes(self) -> int:
+        return self._buf_bytes
+
+    def _concat_buffer(self):
+        keys = np.concatenate(self._buf_keys, axis=1)
+        vals = np.concatenate(self._buf_vals, axis=1)
+        return keys, vals
+
+    def _clear_buffer(self):
+        self._buf_keys, self._buf_vals = [], []
+        self._buf_elems = self._buf_bytes = 0
+        self._buf_t0 = None
+
+    def _flush_buffer(self, interpret=None, use_kernel=None):
+        """Synchronous submit: dispatch the whole buffer inline.  The buffer
+        clears only after a successful dispatch -- a failed flush (OOM,
+        trace error) leaves the microbatches intact for retry instead of
+        silently dropping them."""
+        keys, vals = self._concat_buffer()
+        self._state = self._dispatch(
+            self._state, jnp.asarray(keys), jnp.asarray(vals),
+            self._interpret if interpret is None else interpret,
+            self._use_kernel if use_kernel is None else use_kernel)
+        self._clear_buffer()
+
+    # -- drain / state ------------------------------------------------------
+    def drain(self, interpret=None, use_kernel=None):
+        """Make every ingested element visible in ``state``: flush the host
+        buffer and settle any in-flight dispatches.  Deterministic: after
+        drain, the state is a pure function of the ingested stream and the
+        flush-policy boundaries."""
+        if self._buf_keys:
+            self._flush_buffer(interpret=interpret, use_kernel=use_kernel)
+        self._settle()
+        return self
+
+    def _settle(self):
+        """Wait for in-flight work (no-op for synchronous planes)."""
+
+    @property
+    def state(self):
+        """The settled device state (in-flight work completed; the host
+        buffer is NOT flushed -- pending microbatches stay pending)."""
+        self._settle()
+        return self._state
+
+    def set_state(self, st):
+        """Replace the device state (checkpoint restore, merge results).
+        In-flight work settles first so nothing is silently dropped; a
+        pending host buffer is preserved and will apply on top."""
+        self._settle()
+        self._state = st
+
+    def close(self):
+        """Release plane resources (worker threads); no-op for synchronous
+        planes, and optional everywhere (GC/atexit cover the async one)."""
+
+
+@register_plane("dense")
+class DensePlane(DataPlane):
+    """Pure-jnp reference plane: the vmapped registry-spec update on the
+    concatenated buffer (the conformance harness's reference dispatch)."""
+
+    def _dispatch(self, state, keys, values, interpret, use_kernel):
+        del interpret, use_kernel  # the vmapped spec update has no kernel
+        # honor the ingest padding contract (keys == -1 contribute nothing):
+        # the scatter kernel masks padding itself, but the plain spec update
+        # would hash key -1 into a real bucket -- zeroing the value is
+        # enough because every randomizer is multiplicative in the value,
+        # so a 0 update is a no-op on the linear sketch, and the candidate
+        # refresh already masks -1 slots
+        values = jnp.where(keys == jnp.int32(-1), 0.0, values)
+        return batched_ops(self.spec).update(state, keys, values)
+
+
+@register_plane("sparse", "ingest")
+class SparsePlane(DataPlane):
+    """Synchronous scatter-kernel plane: one batched Pallas scatter
+    pallas_call per flush for every sketch-backed sampler (``ingest_sparse``;
+    vmapped fallback for samplers with no sketch)."""
+
+    def _dispatch(self, state, keys, values, interpret, use_kernel):
+        return ingest_sparse(self.spec, state, keys, values,
+                             interpret=interpret, use_kernel=use_kernel)
+
+
+# Async planes whose worker thread is running: shut them down at interpreter
+# exit (a daemon thread still inside a jax computation during runtime
+# teardown can abort the process), and individually when a plane is GC'd.
+_LIVE_ASYNC: "weakref.WeakSet" = weakref.WeakSet()
+
+
+@atexit.register
+def _shutdown_live_async_planes():
+    for plane in list(_LIVE_ASYNC):
+        try:
+            plane.close()
+        except Exception:
+            pass
+
+
+def _shutdown_worker(jobs: queue.Queue):
+    """GC finalizer for AsyncPlane: ask the worker to exit (best-effort --
+    a full queue means the worker is alive and will drain it, then see the
+    sentinel on a later get; daemon threads never block interpreter exit)."""
+    try:
+        jobs.put_nowait(None)
+    except queue.Full:
+        pass
+
+
+@register_plane("async")
+class AsyncPlane(SparsePlane):
+    """Double-buffered asynchronous scatter plane.
+
+    Flush batches are handed to ONE worker thread (FIFO) which dispatches
+    and materializes them (``jax.block_until_ready``), so batch N executes
+    while the producer accumulates batch N+1 -- the double buffer.  The job
+    queue is bounded (one in flight + one queued): a producer that runs
+    more than two batches ahead blocks, which bounds host memory and gives
+    natural backpressure.
+
+    Determinism: dispatch boundaries are computed on the PRODUCER side by
+    the FlushPolicy, never by worker timing, so the dispatch sequence --
+    and therefore the drained state and samples, bit for bit -- equals the
+    synchronous ``SparsePlane`` under the same policy and microbatch
+    stream.  Timing only moves WHERE the producer waits.
+
+    Errors: a failed dispatch parks the failed batch and every batch
+    queued behind it (order preserved); the next ``drain()``/flush
+    re-raises the error with those batches re-queued at the FRONT of the
+    host buffer, so a retry drain replays them in the original order.
+    """
+
+    _QUEUE_DEPTH = 1  # + the batch the worker holds = double buffering
+
+    def __init__(self, spec, state, policy=None, interpret=None,
+                 use_kernel=None):
+        super().__init__(spec, state, policy=policy, interpret=interpret,
+                         use_kernel=use_kernel)
+        self._jobs: queue.Queue = queue.Queue(maxsize=self._QUEUE_DEPTH)
+        self._lock = threading.Lock()
+        self._error: Optional[BaseException] = None
+        self._parked: list = []     # batches skipped after an error, in order
+        self._worker: Optional[threading.Thread] = None
+
+    def _ensure_worker(self):
+        if self._worker is None:
+            self._worker = threading.Thread(
+                target=self._run, name="repro-async-plane", daemon=True)
+            self._worker.start()
+            _LIVE_ASYNC.add(self)
+            weakref.finalize(self, _shutdown_worker, self._jobs)
+
+    def _run(self):
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                self._jobs.task_done()
+                return
+            keys, vals, interpret, use_kernel = job
+            try:
+                with self._lock:
+                    if self._error is not None:
+                        # preserve order behind the failed batch: park, so a
+                        # retry drain replays failed + parked in sequence
+                        self._parked.append((keys, vals))
+                        continue
+                st = self._dispatch(self._state, jnp.asarray(keys),
+                                    jnp.asarray(vals), interpret, use_kernel)
+                jax.block_until_ready(st)  # materialize: bounds in-flight
+                self._state = st
+            except Exception as e:  # surfaced at the next drain/flush
+                with self._lock:
+                    self._error = e
+                    self._parked.append((keys, vals))
+            finally:
+                self._jobs.task_done()
+
+    def _flush_buffer(self, interpret=None, use_kernel=None):
+        self._raise_pending_error()
+        self._ensure_worker()
+        keys, vals = self._concat_buffer()
+        self._clear_buffer()
+        self._jobs.put((keys, vals,
+                        self._interpret if interpret is None else interpret,
+                        self._use_kernel if use_kernel is None
+                        else use_kernel))
+
+    def _settle(self):
+        if self._worker is not None:
+            self._jobs.join()
+        self._raise_pending_error()
+
+    def _raise_pending_error(self):
+        with self._lock:
+            if self._error is None:
+                return
+        # settle the job queue BEFORE clearing the error: batches still
+        # queued behind the failure must park (the worker skips dispatch
+        # while the error is set) or they would dispatch ahead of the
+        # re-queued failed batch and break the order-preserving retry
+        self._jobs.join()
+        with self._lock:
+            err, self._error = self._error, None
+            parked, self._parked = self._parked, []
+        if err is None:
+            return
+        # re-queue the failed + parked batches ahead of anything currently
+        # buffered, preserving the original dispatch order for the retry
+        for keys, vals in reversed(parked):
+            self._buf_keys.insert(0, keys)
+            self._buf_vals.insert(0, vals)
+            self._buf_elems += keys.shape[1]
+            self._buf_bytes += keys.nbytes + vals.nbytes
+        if self._buf_t0 is None and self._buf_keys:
+            self._buf_t0 = time.monotonic()
+        raise RuntimeError(
+            f"async ingest dispatch failed; the failed microbatches were "
+            f"re-queued ({self._buf_elems} per-stream elements pending) -- "
+            f"drain() again to retry") from err
+
+    def close(self):
+        """Stop the worker thread (tests / explicit teardown; GC and daemon
+        threading make this optional).  Blocks until the worker drains its
+        in-flight dispatch and exits; if it fails to stop, the plane
+        refuses further use rather than risk TWO workers mutating the
+        state concurrently (which would silently break bitwise parity)."""
+        if self._worker is None:
+            return
+        self._jobs.put(None)
+        self._worker.join(timeout=60.0)
+        if self._worker.is_alive():
+            raise RuntimeError(
+                "async plane worker did not stop within 60s (dispatch "
+                "stuck?); the plane cannot be reused safely")
+        self._worker = None

@@ -11,12 +11,26 @@ across serving replicas) -- and the per-request top tokens print at the end.
 perfect, tv): the engine is sampler-generic, so serving analytics swap
 samplers without code changes.
 
-Token updates flow through the engine's TURNSTILE ingest plane
-(``engine.ingest``): microbatches buffer host-side and flush through one
-batched Pallas scatter dispatch.  ``--worp-window W`` keeps the analytics
-over a sliding window of the last W decode steps by RETRACTING (value -1
-deletions) tokens as they age out -- the signed-update workload the paper's
-turnstile model exists for.
+Token updates flow through the engine's pluggable DATA PLANE
+(``--plane``): microbatches buffer host-side and dispatch through the
+synchronous batched Pallas scatter plane (``sparse``, default), the
+double-buffered worker-thread plane (``async``: the decode loop never
+stalls on analytics dispatch), or the vmapped-jnp reference plane
+(``dense``).  ``--worp-window W`` keeps the analytics over a sliding
+window of the last W decode steps by RETRACTING (value -1 deletions)
+tokens as they age out -- the signed-update workload the paper's turnstile
+model exists for.
+
+Multi-worker serving (``--workers N``): the decode stream is sharded
+round-robin across N engine shards -- worker ``t % N`` ingests decode step
+``t`` (and later retracts it when a window is set), modelling N serving
+replicas that each observe a slice of every request's traffic.  Because
+all shards derive identical per-stream seeds, their states are mergeable
+stream-by-stream: at sampling time the shards aggregate through the
+distributed reduction layer (host-form ``butterfly_allmerge`` for
+power-of-two worker counts, ``tree_merge`` otherwise) and the aggregated
+per-request samples equal a single worker that saw the whole stream --
+the paper's composability, end to end.
 """
 import argparse
 
@@ -26,9 +40,52 @@ import numpy as np
 
 from repro.configs.base import ARCH_NAMES, get_config
 from repro.core import sampler as core_sampler
-from repro.engine import EngineConfig, SketchEngine
+from repro.distributed import sharding as shd
+from repro.engine import EngineConfig, SketchEngine, available_planes
 from repro.models import model as M
 from repro.models import transformer as T
+
+
+def make_worker_engines(cfg: EngineConfig, workers: int, plane: str = "sparse",
+                        flush_elems: int = 4096) -> list:
+    """N mergeable engine shards: identical EngineConfig => identical
+    per-stream hash/transform seeds, so stream b of every worker is a shard
+    of request b's logical stream (the ``merge_with`` contract)."""
+    if workers < 1:
+        raise ValueError(f"workers must be >= 1, got {workers}")
+    return [SketchEngine(cfg, plane=plane, flush_elems=flush_elems)
+            for _ in range(workers)]
+
+
+def aggregate_worker_states(workers: list):
+    """Drain every worker's data plane and reduce the shard states to the
+    union state through the distributed merge layer: the host-form
+    butterfly (hypercube XOR rounds) for power-of-two worker counts, the
+    pairwise log-depth tree otherwise.  Stream-wise merging requires the
+    shards to be mergeable -- identical configs, hence identical per-stream
+    seeds (validated leaf-wise by the merge trees as well)."""
+    if not workers:
+        raise ValueError("aggregate_worker_states of no workers")
+    ref = workers[0].cfg
+    for i, w in enumerate(workers[1:], start=1):
+        if w.cfg != ref:
+            raise ValueError(
+                f"worker {i} config differs from worker 0; shards must "
+                f"share an EngineConfig to be mergeable")
+    states = [w.flush().state for w in workers]
+    if len(states) == 1:
+        return states[0]
+    merge = workers[0].ops.merge
+    if len(states) & (len(states) - 1) == 0:  # power of two: butterfly
+        return shd.butterfly_allmerge(states, None, merge)
+    return shd.tree_merge(states, merge)
+
+
+def sample_aggregated(workers: list, k: int):
+    """Per-request WOR samples over the UNION of all workers' ingested
+    traffic (equals a single worker that saw the whole stream)."""
+    merged = aggregate_worker_states(workers)
+    return workers[0].sample_state(merged, k)
 
 
 def main():
@@ -51,6 +108,16 @@ def main():
                     choices=core_sampler.available(),
                     help="registered sampler backing the token analytics "
                          "engine (see repro.core.sampler)")
+    ap.add_argument("--plane", default="sparse",
+                    choices=available_planes(),
+                    help="data plane for the analytics ingest: sparse "
+                         "(sync Pallas scatter), async (double-buffered "
+                         "worker thread), dense (vmapped jnp reference)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="serving replicas: the decode stream shards "
+                         "round-robin across N engines whose per-request "
+                         "samples aggregate through the distributed merge "
+                         "trees at reporting time")
     args = ap.parse_args()
     if args.worp_topk < 0:
         ap.error("--worp-topk must be >= 0")
@@ -58,6 +125,8 @@ def main():
         ap.error("--worp-p must be > 0 (samples by |freq|^p)")
     if args.worp_window < 0:
         ap.error("--worp-window must be >= 0")
+    if args.workers < 1:
+        ap.error("--workers must be >= 1")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -87,47 +156,61 @@ def main():
     step = jax.jit(lambda p, b: T.forward_decode(p, b, cfg))
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     pos0 = S + (cfg.num_patches if cfg.family == "vlm" else 0)
-    engine = None
-    window: list = []  # decode-step token batches still inside the window
+    engines: list = []
+    window: list = []  # (worker_idx, token batch) still inside the window
+    nstep = 0          # decode-step counter (round-robin worker routing)
     if args.worp_topk:
-        # one engine stream per request; token updates buffer host-side and
-        # flush through one batched scatter-kernel dispatch (turnstile plane)
-        engine = SketchEngine(EngineConfig(
+        # one engine stream per request, sharded over --workers replicas;
+        # token updates buffer host-side and dispatch through the selected
+        # data plane (turnstile ingest)
+        ecfg = EngineConfig(
             num_streams=B, rows=5, width=max(256, 31 * args.worp_topk),
             candidates=4 * args.worp_topk, p=args.worp_p, seed=0x5EED,
             sampler=args.sampler, domain=cfg.vocab_size,
-            num_samplers=max(4, args.worp_topk)))
+            num_samplers=max(4, args.worp_topk))
+        engines = make_worker_engines(ecfg, args.workers, plane=args.plane)
+
+        def ingest_step(t):
+            widx = nstep % len(engines)
+            engines[widx].ingest(t, np.ones(t.shape, np.float32))
+            if args.worp_window:
+                window.append((widx, np.asarray(t)))
+                if len(window) > args.worp_window:
+                    # retraction: the aged-out step leaves the sliding
+                    # window THROUGH THE WORKER THAT INGESTED IT, so every
+                    # shard stream stays a sub-multiset of the union
+                    oidx, old = window.pop(0)
+                    engines[oidx].ingest(old,
+                                         -np.ones(old.shape, np.float32))
+
         if not args.worp_window:
             # unbounded analytics include the prompt; windowed are decode-only
-            engine.ingest(batch["tokens"],
-                          np.ones(batch["tokens"].shape, np.float32))
-        engine.ingest(tok, np.ones(tok.shape, np.float32))
-        if args.worp_window:
-            window.append(np.asarray(tok))
+            engines[0].ingest(batch["tokens"],
+                              np.ones(batch["tokens"].shape, np.float32))
+        ingest_step(tok)
+        nstep += 1
     outs = [np.asarray(tok)]
     for i in range(args.tokens):
         lg, cache = step(params, {"token": tok, "pos": jnp.int32(pos0 + i),
                                   "cache": cache})
         tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         outs.append(np.asarray(tok))
-        if engine is not None:
-            engine.ingest(tok, np.ones(tok.shape, np.float32))
-            if args.worp_window:
-                window.append(np.asarray(tok))
-                if len(window) > args.worp_window:
-                    # retraction: the aged-out step leaves the sliding window
-                    old = window.pop(0)
-                    engine.ingest(old, -np.ones(old.shape, np.float32))
+        if engines:
+            ingest_step(tok)
+            nstep += 1
     print("generated ids:")
     for row in np.concatenate(outs, axis=1):
         print(" ", row.tolist())
-    if engine is not None:
-        sample = engine.sample(args.worp_topk)  # flushes pending ingests
+    if engines:
+        # flushes every worker's pending ingests, merges the shard states
+        # (butterfly/tree), then samples the aggregated per-request streams
+        sample = sample_aggregated(engines, args.worp_topk)
         keys, freqs = np.asarray(sample.keys), np.asarray(sample.freqs)
         scope = (f"last {args.worp_window} decode steps" if args.worp_window
                  else "prompt + decode")
+        wtag = f", {args.workers} workers" if args.workers > 1 else ""
         print(f"per-request top-{args.worp_topk} tokens over {scope} "
-              f"(WOR ell_{args.worp_p} sample):")
+              f"(WOR ell_{args.worp_p} sample{wtag}):")
         for b in range(B):
             pairs = [f"{int(t)}:{f:.0f}" for t, f in zip(keys[b], freqs[b])
                      if t >= 0]

@@ -9,6 +9,10 @@ the batch tokens feed a one-stream ``SketchEngine`` backed by any registered
 sampler (onepass / twopass / perfect / tv), and the final metrics include
 the top-token WOR sample -- the data-pipeline tie-in (which tokens dominate
 the corpus the model is actually seeing) at sketch cost, not vocab cost.
+``analytics_plane`` picks the engine data plane; the default ``"async"``
+double-buffers the scatter dispatch on a worker thread so token analytics
+never stall the training step (drained deterministically at the final
+``sample``, bit-identical to the sync plane).
 """
 from __future__ import annotations
 
@@ -44,6 +48,7 @@ def run_training(
     print_fn: Callable[[str], None] = print,
     analytics_sampler: Optional[str] = None,
     analytics_topk: int = 16,
+    analytics_plane: str = "async",
 ) -> Dict[str, Any]:
     """Train ``cfg`` on the synthetic Zipf stream.  Returns final metrics."""
     key = jax.random.PRNGKey(seed)
@@ -79,7 +84,8 @@ def run_training(
             num_streams=1, rows=5, width=max(256, 31 * analytics_topk),
             candidates=4 * analytics_topk, capacity=4 * analytics_topk,
             seed=seed ^ 0x70CEB5, sampler=analytics_sampler,
-            domain=cfg.vocab_size, num_samplers=max(4, analytics_topk)))
+            domain=cfg.vocab_size, num_samplers=max(4, analytics_topk)),
+            plane=analytics_plane)
 
     watchdog = StragglerWatchdog(threshold=3.0)
     losses = []

@@ -18,6 +18,7 @@ from . import bounds, empirics, report  # noqa: F401
 from .conformance import (  # noqa: F401
     BOTTOMK,
     ConformanceConfig,
+    check_ht_ks,
     check_ht_unbiased,
     check_inclusion_probabilities,
     check_table3_nrmse,

@@ -32,8 +32,9 @@ def main(argv=None) -> int:
                          "0.5 1.0 1.5 2.0)")
     ap.add_argument("--paths", nargs="*", default=list(empirics.PATHS),
                     choices=list(empirics.PATHS),
-                    help="data planes: dense (vmapped update) and/or "
-                         "ingest (batched scatter kernel)")
+                    help="data planes (engine plane registry): dense "
+                         "(vmapped update), ingest (batched scatter "
+                         "kernel), async (double-buffered worker thread)")
     ap.add_argument("--trials", type=int, default=None,
                     help="Monte-Carlo trials per cell (default: fast 160, "
                          "deep 384)")

@@ -13,6 +13,12 @@ trial counts and failure budget (``bounds``) -- no hand-tuned epsilons:
       (Eq. 2) are unbiased: |mean_T - truth| within the CLT radius on the
       empirical std, plus the Theorem-5.1 bias allowance for estimated-
       frequency samplers.
+  check_ht_ks                     the WHOLE HT-estimate distribution is
+      data-plane invariant: two-sample Kolmogorov-Smirnov against the SAME
+      spec on the dense reference plane under a disjoint trial seed bank,
+      within the pure two-sample DKW radius (both sides carry identical
+      sketch noise, so no allowances are needed and kernel-plane drift
+      fails distributionally).
   check_wor_distinct              WOR means WITHOUT replacement: every
       trial's live sample keys are distinct (hard property), and bottom-k
       samplers fill all k slots.
@@ -195,6 +201,63 @@ def check_ht_unbiased(name: str, scheme: str, p: float, path: str,
     details["trials"] = cfg.trials
     return CheckResult("ht_unbiased", name, scheme, p, path,
                        PASS if margin <= 0 else FAIL, details)
+
+
+# Disjoint-seed-bank dense-plane HT ensembles for the KS check.  The key
+# includes the SPEC (``make_sampler`` is lru-cached, so registry specs are
+# identical objects across a path sweep and each reference is computed
+# once) -- injected custom specs (the negative-control hook) therefore get
+# their own reference instead of silently sharing one by sampler name.
+_KS_REF_CACHE: dict = {}
+
+
+def _ks_reference(name: str, scheme: str, p: float,
+                  cfg: ConformanceConfig, spec: SamplerSpec):
+    key = (name, scheme, p, cfg, spec)
+    if key not in _KS_REF_CACHE:
+        freqs = empirics.zipf_freqs(cfg.n, cfg.alpha, seed=cfg.seed & 0xFF)
+        sample, _ = empirics.run_trials(
+            spec, freqs, cfg.k, cfg.trials, cfg.seed,
+            path=empirics.DENSE, chunks=cfg.chunks,
+            offset=2 * cfg.ref_offset)
+        _KS_REF_CACHE[key] = sample
+    return _KS_REF_CACHE[key]
+
+
+def check_ht_ks(name: str, scheme: str, p: float, path: str,
+                cfg: ConformanceConfig,
+                spec: Optional[SamplerSpec] = None,
+                data: Optional[CellData] = None) -> CheckResult:
+    """Two-sample KS on HT-estimate DISTRIBUTIONS across data planes
+    (ROADMAP's conformance-depth item, built on ``bounds.dkw_radius``).
+
+    ``check_ht_unbiased`` constrains only the mean; this check compares the
+    full empirical CDF of the cell's per-trial HT sum estimates (power 1)
+    against the SAME spec run on the dense reference plane under a DISJOINT
+    trial seed bank -- two independent draws from what must be one
+    distribution.  The tolerance is the pure two-sample DKW radius: no
+    sketch allowances are needed because both sides carry identical sketch
+    noise, so a kernel-plane drift (scatter bias, transform skew, seed
+    plumbing) surfaces as a distribution-level KS failure even when every
+    point test passes.  On the dense plane itself the check is a seed-bank
+    independence control (disjoint ``derive_stream_seeds`` offsets must
+    give exchangeable ensembles).
+    """
+    if name not in BOTTOMK and spec is None:
+        return CheckResult("ht_ks", name, scheme, p, path, SKIP,
+                           {"reason": "no bottom-k threshold (HT undefined)"})
+    data = _data(name, scheme, p, path, cfg, spec, data)
+    est = empirics.ht_estimates(data.sample, p, jnp.abs, scheme)
+    ref_sample = _ks_reference(name, scheme, p, cfg, data.spec)
+    ref = empirics.ht_estimates(ref_sample, p, jnp.abs, scheme)
+    ks = empirics.ks_statistic(est, ref)
+    tol = bounds.two_sample_ks_radius(cfg.trials, cfg.trials, cfg.delta)
+    margin = ks - tol
+    return CheckResult(
+        "ht_ks", name, scheme, p, path, PASS if margin <= 0 else FAIL,
+        {"ks": ks, "ks_radius": tol, "worst_margin": float(margin),
+         "trials": cfg.trials, "reference": "dense plane, disjoint seed "
+         "bank (offset 2*ref_offset)"})
 
 
 def check_wor_distinct(name: str, scheme: str, p: float, path: str,
@@ -390,7 +453,7 @@ def check_table3_nrmse(trials: int = 12, delta: float = 1e-3,
 # ---------------------------------------------------------------------------
 
 CELL_CHECKS = (check_inclusion_probabilities, check_ht_unbiased,
-               check_wor_distinct, check_wor_beats_wr,
+               check_ht_ks, check_wor_distinct, check_wor_beats_wr,
                check_tv_single_draw)
 
 
@@ -406,7 +469,7 @@ def run_cell(name: str, scheme: str, p: float, path: str,
 def run_suite(samplers: Optional[Sequence[str]] = None,
               schemes: Sequence[str] = SCHEMES,
               ps: Sequence[float] = (1.0,),
-              paths: Sequence[str] = (empirics.DENSE, empirics.INGEST),
+              paths: Sequence[str] = empirics.PATHS,
               cfg: ConformanceConfig = ConformanceConfig(),
               table3_trials: int = 0) -> dict:
     """Sweep the grid and build the JSON report.

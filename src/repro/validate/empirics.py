@@ -4,11 +4,15 @@ A *trial* is one full run of a sampler on a fixed frequency vector under a
 fresh hash/transform seed pair.  The engine's batched ops make T trials ONE
 vmapped computation: ``derive_trial_seeds`` (the engine's trial-seeding
 hook) hands out T independent seed pairs, ``run_trials`` feeds the same
-data to all T samplers through either the dense ``update`` plane (vmapped
-spec update) or the sparse ``ingest`` plane (the batched Pallas scatter
-path via ``engine.ingest_sparse``), and every downstream statistic --
-per-key inclusion counts, HT sum/moment estimates, sample distinctness --
-is computed over the leading (T,) axis.
+data to all T samplers through a DATA PLANE from the engine's plane
+registry (``repro.engine.planes``) -- the dense vmapped reference plane,
+the sparse batched-Pallas-scatter plane (grid name ``"ingest"``, the
+registry alias for ``"sparse"``), or the double-buffered async plane --
+and every downstream statistic -- per-key inclusion counts, HT sum/moment
+estimates, sample distinctness -- is computed over the leading (T,) axis.
+Every registered plane gets distribution-level conformance for free:
+``PATHS`` is derived from the plane registry, so a new plane shows up in
+the conformance grid without edits here.
 
 The oracle side (``perfect_trials``) evaluates the exact bottom-k sample of
 the TRUE frequency vector for T reference seeds; it also returns the full
@@ -26,12 +30,17 @@ import numpy as np
 from repro.core import estimators, perfect, transforms
 from repro.core.sampler import SamplerConfig, SamplerSpec, make_sampler
 from repro.engine import engine as eng
+from repro.engine import planes
 
 _EMPTY = -1
 
 DENSE = "dense"
-INGEST = "ingest"
-PATHS = (DENSE, INGEST)
+INGEST = "ingest"     # grid name of the sparse scatter plane (registry alias)
+ASYNC = "async"
+# one conformance path per registered plane ("sparse" appears under its
+# historical grid name "ingest"; new planes join the grid automatically)
+PATHS = tuple(INGEST if name == "sparse" else name
+              for name in planes.available_planes())
 
 
 def zipf_freqs(n: int, alpha: float, seed: int = 0,
@@ -75,28 +84,32 @@ def run_trials(spec: SamplerSpec, freqs: np.ndarray, k: int, trials: int,
     batched Sample (leading (T,) axis on every leaf) and the final batched
     state.
 
-    ``path`` selects the data plane: ``"dense"`` goes through the vmapped
-    spec update (the jnp reference plane); ``"ingest"`` goes through
-    ``engine.ingest_sparse`` -- the batched Pallas scatter kernel for every
-    sketch-backed sampler, the vmapped fallback otherwise -- so both planes
-    face the same distributional acceptance bounds.  The stream is split
-    into ``chunks`` element batches to exercise streaming accumulation.
+    ``path`` names a registered data plane (``repro.engine.planes``):
+    ``"dense"`` is the vmapped spec update (the jnp reference plane),
+    ``"ingest"`` the batched Pallas scatter plane (registry alias of
+    ``"sparse"``; vmapped fallback for samplers with no sketch), and
+    ``"async"`` the double-buffered worker-thread plane -- every plane
+    faces the same distributional acceptance bounds.  The stream is split
+    into ``chunks`` element microbatches, each dispatched at its own flush
+    boundary (``FlushPolicy(max_elems=1)`` fires per ingest), so streaming
+    accumulation is exercised with identical dispatch boundaries on every
+    plane.
     """
     if path not in PATHS:
         raise ValueError(f"unknown trial path {path!r}; expected {PATHS}")
     n = int(np.shape(freqs)[0])
-    keys = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (trials, n))
-    vals = jnp.broadcast_to(jnp.asarray(freqs, jnp.float32), (trials, n))
+    keys = np.broadcast_to(np.arange(n, dtype=np.int32), (trials, n))
+    vals = np.broadcast_to(np.asarray(freqs, np.float32), (trials, n))
     sk_seeds, t_seeds = derive_trial_seeds(trials, seed, offset=offset)
     ops = eng.batched_ops(spec)
-    st = ops.init(sk_seeds, t_seeds)
+    plane = planes.make_plane(path, spec, ops.init(sk_seeds, t_seeds),
+                              policy=planes.FlushPolicy(max_elems=1))
     step = -(-n // chunks)
     for lo in range(0, n, step):
-        kc, vc = keys[:, lo:lo + step], vals[:, lo:lo + step]
-        if path == DENSE:
-            st = ops.update(st, kc, vc)
-        else:
-            st = eng.ingest_sparse(spec, st, kc, vc)
+        plane.ingest(keys[:, lo:lo + step], vals[:, lo:lo + step])
+    plane.drain()
+    st = plane.state
+    plane.close()  # trial planes are throwaway: release worker threads
     return ops.sample(st, k=k), st
 
 
@@ -168,6 +181,17 @@ def wr_moment_estimates(freqs: np.ndarray, k: int, p: float, power: float,
     draws = np.asarray(jax.jit(jax.vmap(
         lambda kk: perfect.wr_sample(fv, k, p, kk)))(keys))
     return ((w[draws] ** power) / (k * probs[draws])).sum(axis=1)
+
+
+def ks_statistic(a, b) -> float:
+    """Two-sample Kolmogorov-Smirnov statistic sup_x |F_a(x) - F_b(x)|
+    (evaluated over the pooled sample points; scipy-free)."""
+    a = np.sort(np.asarray(a, np.float64))
+    b = np.sort(np.asarray(b, np.float64))
+    pooled = np.concatenate([a, b])
+    fa = np.searchsorted(a, pooled, side="right") / a.size
+    fb = np.searchsorted(b, pooled, side="right") / b.size
+    return float(np.max(np.abs(fa - fb)))
 
 
 def moment_truth(freqs: np.ndarray, power: float) -> float:

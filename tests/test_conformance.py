@@ -32,13 +32,17 @@ CFG_DEEP = C.ConformanceConfig(trials=384, ref_trials=1152)
 
 
 def _grid():
-    """Full sampler x scheme x p x path grid; the tier-1 subset is the p=1
-    slice (dense everywhere + ingest for the Pallas-backed samplers)."""
+    """Full sampler x scheme x p x path grid (paths = the engine's plane
+    registry); the tier-1 subset is the p=1 slice: dense everywhere,
+    ingest for the Pallas-backed samplers, and a thin async slice (onepass)
+    so the double-buffered plane is conformance-guarded on every push."""
     params = []
     for name, scheme, p, path in itertools.product(
             available(), C.SCHEMES, C.PS, empirics.PATHS):
-        fast = p == 1.0 and (path == empirics.DENSE
-                             or name in ("onepass", "twopass"))
+        fast = p == 1.0 and (
+            path == empirics.DENSE
+            or (path == empirics.INGEST and name in ("onepass", "twopass"))
+            or (path == empirics.ASYNC and name == "onepass"))
         marks = () if fast else (pytest.mark.deep,)
         params.append(pytest.param(
             name, scheme, p, path, marks=marks,
@@ -69,7 +73,7 @@ class TestRegistryConformance:
             skipped = {r.check for r in rs if r.status == report.SKIP}
             if name == "tv":
                 assert skipped == {"inclusion_probabilities", "ht_unbiased",
-                                   "wor_beats_wr"}
+                                   "ht_ks", "wor_beats_wr"}
             else:
                 assert skipped <= {"tv_single_draw", "wor_beats_wr"}
 
@@ -150,6 +154,22 @@ class TestHarnessCanFail:
         r = C.check_wor_distinct("perfect", transforms.PPSWOR, 1.0,
                                  empirics.DENSE, cfg, spec=broken)
         assert r.status == report.FAIL
+
+    def test_biased_kernel_plane_fails_ht_ks(self):
+        """A drifted data plane (here: an ingest path whose updates scale
+        values by 1.25, simulating a biased scatter kernel) must fail the
+        cross-plane KS check against the clean dense reference."""
+        cfg = CFG_FAST
+        base = self._base(cfg)
+        biased = base._replace(
+            update=lambda st, k, v: base.update(st, k, v * 1.25))
+        data = C.prepare_cell("perfect", transforms.PPSWOR, 1.0,
+                              empirics.INGEST, cfg, spec=biased)
+        data = data._replace(spec=base)  # the reference plane is clean
+        r = C.check_ht_ks("perfect", transforms.PPSWOR, 1.0,
+                          empirics.INGEST, cfg, spec=base, data=data)
+        assert r.status == report.FAIL
+        assert r.details["worst_margin"] > 0
 
 
 class TestBounds:
@@ -232,6 +252,32 @@ class TestEmpirics:
         si, _ = empirics.run_trials(spec, freqs, 4, 32, seed=5,
                                     path=empirics.INGEST)
         assert np.array_equal(np.asarray(sd.keys), np.asarray(si.keys))
+
+    def test_paths_cover_plane_registry(self):
+        """Every registered data plane is a conformance path (new planes
+        join the grid automatically; 'sparse' keeps its grid name
+        'ingest')."""
+        from repro.engine import planes
+
+        want = {("ingest" if n == "sparse" else n)
+                for n in planes.available_planes()}
+        assert set(empirics.PATHS) == want
+        assert {"dense", "ingest", "async"} <= set(empirics.PATHS)
+
+    def test_async_path_bitwise_matches_ingest(self):
+        """The double-buffered plane's trials are BIT-identical to the
+        synchronous scatter plane's (same policy boundaries)."""
+        freqs = empirics.zipf_freqs(64, 2.0, seed=3)
+        spec = empirics.spec_for("onepass", 64, 4, 1.0, transforms.PPSWOR)
+        si, sti = empirics.run_trials(spec, freqs, 4, 16, seed=5,
+                                      path=empirics.INGEST)
+        sa, sta = empirics.run_trials(spec, freqs, 4, 16, seed=5,
+                                      path=empirics.ASYNC)
+        assert np.array_equal(np.asarray(si.keys), np.asarray(sa.keys))
+        assert np.array_equal(np.asarray(si.freqs), np.asarray(sa.freqs))
+        for a, b in zip(jax.tree_util.tree_leaves(sti),
+                        jax.tree_util.tree_leaves(sta)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
 
     def test_ht_estimates_match_scalar_estimator(self):
         """Batched HT == per-trial scalar sum_statistic (the estimators

@@ -1,0 +1,512 @@
+"""DataPlane layer contracts (ISSUE 5).
+
+Four layers of guarantees:
+  * policy: ``FlushPolicy`` fires on element count / byte budget / wall
+    interval, and planes dispatch exactly at policy boundaries;
+  * determinism: ``AsyncPlane`` (double-buffered worker-thread dispatch)
+    produces BIT-identical drained states and samples to the synchronous
+    ``SparsePlane`` under the same policy -- for EVERY registered sampler
+    -- because dispatch boundaries are producer-side and timing-free;
+  * ordering: interleaving ``ingest`` and ``update`` applies elements in
+    call order (the pending buffer drains BEFORE a dense batch), so any
+    interleaving equals the aggregated-stream oracle;
+  * serving: ``serve --workers N`` round-robin sharding + butterfly/tree
+    aggregation equals the single-worker reference, windows included.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.core import sampler as core_sampler
+from repro.core import transforms
+from repro.engine import planes as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 3
+SCHEMES = [transforms.PPSWOR, transforms.PRIORITY]
+
+
+def _cfg(name, scheme=transforms.PPSWOR, **kw):
+    base = dict(num_streams=B, rows=3, width=128, candidates=64, capacity=64,
+                p=1.0, scheme=scheme, seed=11, sampler=name, domain=40,
+                num_samplers=3)
+    base.update(kw)
+    return E.EngineConfig(**base)
+
+
+def _sparse(seed=0, n=60, domain=40):
+    """Keys over a small domain with well-separated positive frequencies
+    (sample keys are then batching-robust; freqs compare to fp tolerance)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, domain, (B, n)).astype(np.int32)
+    vals = (rng.random((B, n)).astype(np.float32) + 0.5) \
+        * (1 + (keys % 7 == 0) * 20)
+    return keys, vals
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), msg
+
+
+def _assert_samples_bitwise(s1, s2, msg=""):
+    assert np.array_equal(np.asarray(s1.keys), np.asarray(s2.keys)), msg
+    assert np.array_equal(np.asarray(s1.freqs), np.asarray(s2.freqs)), msg
+    assert np.array_equal(np.asarray(s1.threshold),
+                          np.asarray(s2.threshold), equal_nan=True), msg
+
+
+class TestFlushPolicy:
+    def test_element_trigger(self):
+        pol = P.FlushPolicy(max_elems=10)
+        assert not pol.should_flush(9, 10**9, 10**9 * 0.0)
+        assert pol.should_flush(10, 0, 0.0)
+
+    def test_byte_trigger(self):
+        pol = P.FlushPolicy(max_elems=None, max_bytes=64)
+        assert not pol.should_flush(10**6, 63, 0.0)
+        assert pol.should_flush(0, 64, 0.0)
+
+    def test_interval_trigger(self):
+        pol = P.FlushPolicy(max_elems=None, max_interval=5.0)
+        assert not pol.should_flush(10**6, 10**9, 4.9)
+        assert pol.should_flush(0, 0, 5.0)
+
+    def test_plane_respects_byte_budget(self):
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=1)
+        one_batch_bytes = keys[:, :20].nbytes + vals[:, :20].nbytes
+        eng = E.SketchEngine(cfg, flush=P.FlushPolicy(
+            max_elems=None, max_bytes=one_batch_bytes + 1))
+        eng.ingest(keys[:, :20], vals[:, :20])
+        assert eng.pending == 20  # under budget: buffered
+        eng.ingest(keys[:, 20:40], vals[:, 20:40])  # crosses -> dispatched
+        assert eng.pending == 0
+        assert not np.all(np.asarray(eng.state.sketch.table) == 0.0)
+
+    def test_plane_interval_zero_dispatches_every_ingest(self):
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=2)
+        eng = E.SketchEngine(cfg, flush=P.FlushPolicy(
+            max_elems=None, max_interval=0.0))
+        eng.ingest(keys[:, :10], vals[:, :10])
+        assert eng.pending == 0
+        assert not np.all(np.asarray(eng.state.sketch.table) == 0.0)
+
+
+class TestPlaneRegistry:
+    def test_available_planes(self):
+        names = E.available_planes()
+        assert ("dense", "sparse", "async") == names
+
+    def test_ingest_alias_resolves_to_sparse(self):
+        cfg = _cfg("onepass")
+        spec = E.engine_spec(cfg)
+        st = E.init_batched(cfg)
+        plane = P.make_plane("ingest", spec, st)
+        assert isinstance(plane, P.SparsePlane)
+        assert plane.name == "sparse"
+
+    def test_unknown_plane_raises(self):
+        cfg = _cfg("onepass")
+        with pytest.raises(ValueError, match="unknown data plane"):
+            E.SketchEngine(cfg, plane="warp")
+
+    @pytest.mark.parametrize("plane", ["dense", "sparse", "async"])
+    def test_engine_end_to_end_on_every_plane(self, plane):
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=3)
+        eng = E.SketchEngine(cfg, plane=plane, flush_elems=25)
+        eng.ingest(keys, vals)
+        s = eng.sample(4)
+        assert s.keys.shape == (B, 4)
+        assert eng.plane.name == plane
+
+    @pytest.mark.parametrize("plane", ["dense", "sparse", "async"])
+    @pytest.mark.parametrize("name", ["onepass", "perfect"])
+    def test_padding_keys_contribute_nothing(self, name, plane):
+        """keys == -1 slots are padding on EVERY plane (the dense plane
+        must mask them before the spec update -- the scatter kernel does
+        it internally)."""
+        cfg = _cfg(name)
+        keys, vals = _sparse(seed=20, n=24)
+        padded_k = np.concatenate(
+            [keys, np.full((B, 8), -1, np.int32)], axis=1)
+        padded_v = np.concatenate(
+            [vals, np.ones((B, 8), np.float32)], axis=1)
+        a = E.SketchEngine(cfg, plane=plane)
+        a.ingest(padded_k, padded_v)
+        b = E.SketchEngine(cfg, plane=plane)
+        b.ingest(keys, vals)
+        _assert_samples_bitwise(a.sample(4), b.sample(4), f"{name}/{plane}")
+
+
+class TestAsyncBitwiseParity:
+    """The acceptance contract: AsyncPlane == SparsePlane bit for bit under
+    fixed seeds, for every registered sampler (dispatch boundaries are
+    policy-determined on the producer side, never by worker timing)."""
+
+    def _run(self, cfg, plane, keys, vals, flush_elems):
+        eng = E.SketchEngine(cfg, plane=plane, flush_elems=flush_elems)
+        for lo in range(0, keys.shape[1], 8):
+            eng.ingest(keys[:, lo:lo + 8], vals[:, lo:lo + 8])
+        eng.flush()
+        return eng
+
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    @pytest.mark.parametrize("name", core_sampler.available())
+    def test_bitwise_state_and_sample(self, name, scheme):
+        cfg = _cfg(name, scheme)
+        keys, vals = _sparse(seed=4, n=64)
+        sync = self._run(cfg, "sparse", keys, vals, flush_elems=20)
+        asyn = self._run(cfg, "async", keys, vals, flush_elems=20)
+        _assert_trees_equal(sync.state, asyn.state, name)
+        _assert_samples_bitwise(sync.sample(4), asyn.sample(4), name)
+
+    def test_deletions_bitwise(self):
+        """Signed (turnstile) streams keep parity: retractions included."""
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=5, n=64)
+        signed = np.concatenate([vals, -vals[:, :32]], axis=1)
+        skeys = np.concatenate([keys, keys[:, :32]], axis=1)
+        sync = self._run(cfg, "sparse", skeys, signed, flush_elems=24)
+        asyn = self._run(cfg, "async", skeys, signed, flush_elems=24)
+        _assert_trees_equal(sync.state, asyn.state)
+
+    def test_state_read_settles_in_flight(self):
+        """Reading .state between ingests waits for in-flight dispatches
+        (deterministic read) without flushing the host buffer."""
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=6, n=40)
+        eng = E.SketchEngine(cfg, plane="async", flush_elems=20)
+        eng.ingest(keys[:, :20], vals[:, :20])   # submitted to the worker
+        eng.ingest(keys[:, 20:30], vals[:, 20:30])  # stays buffered
+        st = eng.state                            # settles the first batch
+        assert eng.pending == 10
+        assert not np.all(np.asarray(st.sketch.table) == 0.0)
+
+    def test_checkpoint_boundary_is_drained(self):
+        """state after flush() == the sync plane's (what a checkpoint
+        saves), and restoring into a fresh async engine keeps working."""
+        cfg = _cfg("twopass")
+        keys, vals = _sparse(seed=7)
+        sync = self._run(cfg, "sparse", keys, vals, flush_elems=16)
+        asyn = self._run(cfg, "async", keys, vals, flush_elems=16)
+        fresh = E.SketchEngine(cfg, plane="async")
+        fresh.state = asyn.state
+        _assert_trees_equal(sync.state, fresh.state)
+        more_k, more_v = _sparse(seed=8, n=16)
+        sync.update(jnp.asarray(more_k), jnp.asarray(more_v))
+        fresh.update(jnp.asarray(more_k), jnp.asarray(more_v))
+        _assert_trees_equal(sync.state, fresh.state)
+
+
+class TestAsyncErrorPropagation:
+    def test_failed_dispatch_requeues_and_raises_then_retries(self):
+        cfg = _cfg("onepass")
+        spec = E.engine_spec(cfg)
+        keys, vals = _sparse(seed=9, n=20)
+        plane = P.make_plane("async", spec, E.init_batched(cfg),
+                             policy=P.FlushPolicy(max_elems=10))
+        ref = P.make_plane("sparse", spec, E.init_batched(cfg),
+                           policy=P.FlushPolicy(max_elems=10))
+        real = plane._dispatch
+        calls = {"n": 0}
+
+        def flaky(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("injected dispatch failure")
+            return real(*a, **kw)
+
+        plane._dispatch = flaky
+        plane.ingest(keys[:, :10], vals[:, :10])   # submits; worker fails
+        with pytest.raises(RuntimeError, match="re-queued"):
+            plane.drain()
+        assert plane.pending == 10                  # batch back in buffer
+        plane.ingest(keys[:, 10:], vals[:, 10:])    # retry coalesces both
+        plane.drain()                               # microbatches into ONE
+        ref.ingest(keys, vals)                      # dispatch of all 20
+        ref.drain()
+        _assert_trees_equal(plane.state, ref.state)
+
+    def test_batch_queued_behind_failure_keeps_order(self):
+        """Regression: a batch still queued behind a failed dispatch must
+        NOT run ahead of the re-queued failed batch when the producer
+        clears the error mid-stream -- the error raise settles the queue
+        first, so the retry replays [failed, trailing, new] in original
+        order (twopass state is order-sensitive, so any reorder diverges
+        from the reference)."""
+        import time as _time
+
+        cfg = _cfg("twopass", capacity=8, candidates=8)
+        spec = E.engine_spec(cfg)
+        rng = np.random.default_rng(19)
+        k = rng.integers(0, 40, (B, 30)).astype(np.int32)
+        v = (rng.random((B, 30)).astype(np.float32) + 0.5) \
+            * (1 + (np.arange(30) < 10) * 30)      # batch 1 is heavy
+        plane = P.make_plane("async", spec, E.init_batched(cfg),
+                             policy=P.FlushPolicy(max_elems=10))
+        real = plane._dispatch
+        calls = {"n": 0}
+
+        def flaky(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                _time.sleep(0.2)  # keep batch 2 queued behind the failure
+                raise RuntimeError("injected dispatch failure")
+            return real(*a, **kw)
+
+        plane._dispatch = flaky
+        plane.ingest(k[:, :10], v[:, :10])          # batch 1: will fail
+        plane.ingest(k[:, 10:20], v[:, 10:20])      # batch 2: queued behind
+        for _ in range(500):                        # wait for the failure
+            with plane._lock:
+                if plane._error is not None:
+                    break
+            _time.sleep(0.01)
+        # batch 3 joins the buffer, then its threshold flush sees the
+        # error: batch 2 must park FIRST (queue settles), then 1, 2, 3
+        # re-queue in original order
+        with pytest.raises(RuntimeError, match="re-queued"):
+            plane.ingest(k[:, 20:], v[:, 20:])
+        assert plane.pending == 30
+        plane.drain()
+        ref = P.make_plane("sparse", spec, E.init_batched(cfg),
+                           policy=P.FlushPolicy(max_elems=30))
+        ref.ingest(k, v)                            # one in-order dispatch
+        ref.drain()
+        _assert_trees_equal(plane.state, ref.state)
+
+
+class TestInterleavedOrdering:
+    """ISSUE 5 satellite: ``update`` must drain the pending ingest buffer
+    BEFORE applying its batch, so ingest -> update -> sample equals the
+    aggregated-stream oracle regardless of interleaving."""
+
+    @pytest.mark.parametrize("plane", ["sparse", "async"])
+    @pytest.mark.parametrize("name", ["onepass", "twopass", "tv", "perfect"])
+    def test_interleaved_equals_aggregated_oracle(self, name, plane):
+        cfg = _cfg(name)
+        keys, vals = _sparse(seed=10, n=60)
+        eng = E.SketchEngine(cfg, plane=plane, flush_elems=10_000)
+        eng.ingest(keys[:, :20], vals[:, :20])       # stays buffered
+        eng.update(jnp.asarray(keys[:, 20:40]), jnp.asarray(vals[:, 20:40]))
+        eng.ingest(keys[:, 40:], vals[:, 40:])
+        s1 = eng.sample(4)
+
+        agg = E.SketchEngine(cfg, plane=plane)
+        agg.ingest(keys[:, :20], vals[:, :20])
+        agg.flush()
+        agg.update(jnp.asarray(keys[:, 20:40]), jnp.asarray(vals[:, 20:40]))
+        agg.ingest(keys[:, 40:], vals[:, 40:])
+        s2 = agg.sample(4)
+        _assert_samples_bitwise(s1, s2, name)
+
+    def test_update_drains_buffer_first_regression(self):
+        """Regression: the ORDER matters.  For the streaming two-pass
+        sampler the pass-II buffer keys by online priorities read from the
+        pass-I sketch AT BATCH TIME, so applying the dense batch before the
+        buffered ingest produces a different state -- the engine must drain
+        first, matching the explicit flush-then-update reference."""
+        cfg = _cfg("twopass", capacity=8, candidates=8)
+        rng = np.random.default_rng(11)
+        k1 = rng.integers(0, 40, (B, 30)).astype(np.int32)
+        v1 = (rng.random((B, 30)).astype(np.float32) + 0.5) * 30  # heavy
+        k2 = rng.integers(0, 40, (B, 30)).astype(np.int32)
+        v2 = rng.random((B, 30)).astype(np.float32) + 0.5         # light
+
+        eng = E.SketchEngine(cfg, flush_elems=10_000)
+        eng.ingest(k1, v1)
+        eng.update(jnp.asarray(k2), jnp.asarray(v2))
+
+        good = E.SketchEngine(cfg)
+        good.ingest(k1, v1)
+        good.flush()
+        good.update(jnp.asarray(k2), jnp.asarray(v2))
+        _assert_trees_equal(eng.state, good.state)
+
+        bad = E.SketchEngine(cfg)                   # the broken ordering
+        bad.update(jnp.asarray(k2), jnp.asarray(v2))
+        bad.ingest(k1, v1)
+        bad.flush()
+        leaves = [np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(jax.tree_util.tree_leaves(eng.state),
+                                  jax.tree_util.tree_leaves(bad.state))]
+        assert not all(leaves), \
+            "ordering discriminator too weak: reorder the data"
+
+    def test_update_dense_drains_buffer_first(self):
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=12, n=30)
+        dense = np.abs(np.random.default_rng(13).normal(
+            size=(B, 40))).astype(np.float32)
+        eng = E.SketchEngine(cfg, flush_elems=10_000)
+        eng.ingest(keys, vals)
+        eng.update_dense(jnp.asarray(dense))
+
+        ref = E.SketchEngine(cfg)
+        ref.ingest(keys, vals)
+        ref.flush()
+        ref.update_dense(jnp.asarray(dense))
+        _assert_trees_equal(eng.state, ref.state)
+
+
+class TestWindowedRetraction:
+    """serve --worp-window through the plane abstraction: the sliding
+    window's signed drain is deterministic across sync/async planes."""
+
+    def _window_stream(self, nsteps=12, n=8, window=4, seed=14):
+        rng = np.random.default_rng(seed)
+        return [rng.integers(0, 40, (B, n)).astype(np.int32)
+                for _ in range(nsteps)], window
+
+    def _run_window(self, cfg, plane, steps, window, flush_elems=20):
+        eng = E.SketchEngine(cfg, plane=plane, flush_elems=flush_elems)
+        live: list = []
+        for t in steps:
+            eng.ingest(t, np.ones(t.shape, np.float32))
+            live.append(t)
+            if len(live) > window:
+                old = live.pop(0)
+                eng.ingest(old, -np.ones(old.shape, np.float32))
+        return eng, live
+
+    @pytest.mark.parametrize("name", ["onepass", "twopass", "tv"])
+    def test_window_drain_bitwise_across_planes(self, name):
+        cfg = _cfg(name)
+        steps, window = self._window_stream()
+        sync, _ = self._run_window(cfg, "sparse", steps, window)
+        asyn, _ = self._run_window(cfg, "async", steps, window)
+        sync.flush()
+        asyn.flush()
+        _assert_trees_equal(sync.state, asyn.state, name)
+        _assert_samples_bitwise(sync.sample(4), asyn.sample(4), name)
+
+    def test_window_equals_window_only_stream(self):
+        """After retractions, the sample equals an engine that only ever
+        saw the final window's tokens (linearity of the turnstile plane)."""
+        cfg = _cfg("onepass")
+        steps, window = self._window_stream()
+        eng, live = self._run_window(cfg, "async", steps, window)
+        s = eng.sample(4)
+        ref = E.SketchEngine(cfg)
+        for t in live:
+            ref.ingest(t, np.ones(t.shape, np.float32))
+        s2 = ref.sample(4)
+        assert np.array_equal(np.asarray(s.keys), np.asarray(s2.keys))
+        np.testing.assert_allclose(np.asarray(s.freqs),
+                                   np.asarray(s2.freqs), rtol=1e-3,
+                                   atol=1e-3)
+
+
+class TestMultiWorkerServe:
+    """serve --workers N: round-robin sharded ingest + butterfly/tree
+    aggregation == the single-worker merged reference."""
+
+    def _steps(self, nsteps=12, n=8, seed=15):
+        rng = np.random.default_rng(seed)
+        # skewed token stream: heavy tokens dominate, so top-k is stable
+        zipf = np.minimum(rng.zipf(1.7, size=(nsteps, B, n)) - 1, 39)
+        return [zipf[i].astype(np.int32) for i in range(nsteps)]
+
+    @pytest.mark.parametrize("workers", [1, 3, 4])
+    def test_aggregated_equals_single_worker(self, workers):
+        from repro.launch import serve
+
+        cfg = _cfg("onepass")
+        steps = self._steps()
+        pool = serve.make_worker_engines(cfg, workers, plane="sparse",
+                                         flush_elems=20)
+        single = E.SketchEngine(cfg)
+        for i, t in enumerate(steps):
+            ones = np.ones(t.shape, np.float32)
+            pool[i % workers].ingest(t, ones)
+            single.ingest(t, ones)
+        s = serve.sample_aggregated(pool, 4)
+        ref = single.sample(4)
+        assert np.array_equal(np.asarray(s.keys), np.asarray(ref.keys))
+        np.testing.assert_allclose(np.asarray(s.freqs),
+                                   np.asarray(ref.freqs), rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_async_workers_match_sync_workers_bitwise(self):
+        from repro.launch import serve
+
+        cfg = _cfg("onepass")
+        steps = self._steps(seed=16)
+
+        def run(plane):
+            pool = serve.make_worker_engines(cfg, 4, plane=plane,
+                                             flush_elems=16)
+            for i, t in enumerate(steps):
+                pool[i % 4].ingest(t, np.ones(t.shape, np.float32))
+            return serve.sample_aggregated(pool, 4)
+
+        _assert_samples_bitwise(run("sparse"), run("async"))
+
+    def test_windowed_multiworker_equals_single(self):
+        """Retractions route to the worker that ingested the step, so the
+        shard union stays exactly the window."""
+        from repro.launch import serve
+
+        cfg = _cfg("onepass")
+        steps = self._steps(seed=17)
+        window = 5
+        pool = serve.make_worker_engines(cfg, 3, plane="sparse",
+                                         flush_elems=16)
+        single = E.SketchEngine(cfg)
+        live: list = []
+        for i, t in enumerate(steps):
+            ones = np.ones(t.shape, np.float32)
+            pool[i % 3].ingest(t, ones)
+            single.ingest(t, ones)
+            live.append((i % 3, t))
+            if len(live) > window:
+                widx, old = live.pop(0)
+                pool[widx].ingest(old, -np.ones(old.shape, np.float32))
+                single.ingest(old, -np.ones(old.shape, np.float32))
+        s = serve.sample_aggregated(pool, 4)
+        ref = single.sample(4)
+        assert np.array_equal(np.asarray(s.keys), np.asarray(ref.keys))
+        np.testing.assert_allclose(np.asarray(s.freqs),
+                                   np.asarray(ref.freqs), rtol=1e-3,
+                                   atol=1e-3)
+
+    def test_mismatched_worker_configs_rejected(self):
+        from repro.launch import serve
+
+        a = E.SketchEngine(_cfg("onepass"))
+        b = E.SketchEngine(_cfg("onepass", seed=99))
+        with pytest.raises(ValueError, match="config differs"):
+            serve.aggregate_worker_states([a, b])
+        with pytest.raises(ValueError, match="no workers"):
+            serve.aggregate_worker_states([])
+
+    def test_worker_count_validation(self):
+        from repro.launch import serve
+
+        with pytest.raises(ValueError, match="workers"):
+            serve.make_worker_engines(_cfg("onepass"), 0)
+
+
+class TestAsyncThreadHygiene:
+    def test_worker_thread_only_spawns_on_use_and_closes(self):
+        cfg = _cfg("onepass")
+        eng = E.SketchEngine(cfg, plane="async")
+        assert eng.plane._worker is None  # lazy: no thread until a flush
+        keys, vals = _sparse(seed=18, n=8)
+        eng.ingest(keys, vals)
+        eng.flush()
+        worker = eng.plane._worker
+        assert worker is not None and worker.is_alive()
+        assert worker.daemon
+        eng.plane.close()
+        assert not worker.is_alive()
+        assert threading.current_thread().is_alive()  # sanity

@@ -23,6 +23,18 @@ class TestTrainingLoop:
         assert np.isfinite(losses).all()
         assert np.mean(losses[-4:]) < np.mean(losses[:4])
 
+    def test_token_analytics_plane_parity(self):
+        """Training-stream token analytics through the async data plane
+        equal the sync sparse plane bit for bit (the engine drains the
+        double buffer deterministically at the final sample)."""
+        cfg = get_config("phi4_mini_38b").reduced()
+        kw = dict(num_steps=4, batch=2, seq=32, lr=1e-3, log_every=100,
+                  print_fn=lambda s: None, analytics_sampler="onepass",
+                  analytics_topk=8)
+        a = loop.run_training(cfg, analytics_plane="async", **kw)
+        b = loop.run_training(cfg, analytics_plane="sparse", **kw)
+        assert a["top_tokens"] == b["top_tokens"]
+
     def test_checkpoint_restart_exact(self, tmp_path):
         """Crash/restart: resumed run produces the same final loss as an
         uninterrupted run (deterministic data + saved optimizer state)."""
