@@ -15,8 +15,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (engine_throughput, fig1_wor_vs_wr, fig2_rankfreq,
-                   gradcomp_comm, psi_calibration, sketch_throughput,
-                   table3_nrmse)
+                   gradcomp_comm, ingest_pipeline, psi_calibration,
+                   sketch_throughput, table3_nrmse)
     from .common import emit
 
     rows = []
@@ -33,6 +33,9 @@ def main() -> None:
     r = sketch_throughput.run(verbose=False); rows += r; emit(r)
     print("== SketchEngine batched multi-stream throughput ==")
     r = engine_throughput.run(verbose=False, fast=args.fast)
+    rows += r; emit(r)
+    print("== Sharded prefetching ingestion pipeline ==")
+    r = ingest_pipeline.run(verbose=False, fast=args.fast)
     rows += r; emit(r)
     print("== WORp gradient compression (Sec. 1 application) ==")
     r = gradcomp_comm.run(verbose=False); rows += r; emit(r)

@@ -1,0 +1,63 @@
+"""Sharded prefetching ingestion pipeline: producers -> batcher -> plane.
+
+    PYTHONPATH=src python examples/sharded_ingest.py
+
+Splits one live turnstile stream across 4 producer threads by per-key hash
+(``ShardedSource``), packs the ragged microbatches into fixed-shape
+kernel-tiling-sized blocks (``PackedBatcher``, one jit trace for the whole
+stream), and feeds a SketchEngine through bounded ring buffers with
+backpressure (``PrefetchingFeeder``).  Shows both consumption modes:
+
+  * fan-in: deterministic shard round-robin into ONE async plane --
+    BITWISE equal to the synchronous plane fed the same stream;
+  * per-shard: each producer feeds its own sub-plane of a PipelinePlane,
+    collapsed through the sampler's composable merge at sampling time.
+"""
+import numpy as np
+
+from repro.data.ingest_pipeline import PrefetchingFeeder, ShardedSource
+from repro.data.pipeline import TurnstileZipfStream
+from repro.engine import EngineConfig, SketchEngine
+
+B, SHARDS = 4, 4  # engine streams, producer shards
+cfg = EngineConfig(num_streams=B, rows=5, width=512, candidates=64, p=1.0,
+                   seed=7)
+stream = TurnstileZipfStream(vocab_size=512, alpha=1.6, seed=3,
+                             delete_fraction=0.25)
+
+
+def feed(plane, pershard=False, **plane_opts):
+    eng = SketchEngine(cfg, plane=plane, flush_elems=1,
+                       plane_opts=plane_opts or None)
+    # one canonical event stream, hash-partitioned across SHARDS producers
+    src = ShardedSource.from_turnstile(stream, n=96, num_shards=SHARDS,
+                                       nsteps=24)
+    stats = PrefetchingFeeder(src, eng, block_elems=256, prefetch=2,
+                              pershard=pershard).run()
+    return eng, stats
+
+
+sync, _ = feed("sparse")
+asyn, stats = feed("async")
+same = np.array_equal(np.asarray(sync.state.sketch.table),
+                      np.asarray(asyn.state.sketch.table))
+print(f"threaded fan-in into async plane bitwise == sync plane: {same}")
+print(f"  {stats.shards} producers, {stats.events} events in "
+      f"{stats.blocks} fixed-shape blocks of span {stats.span} "
+      f"(pack efficiency {stats.pack_efficiency:.2f})")
+print(f"  producers blocked {stats.producer_wait_s * 1e3:.1f} ms total "
+      f"(backpressure), consumer waited {stats.pump_wait_s * 1e3:.1f} ms")
+
+pipe, _ = feed("pipeline", pershard=True, shards=SHARDS)
+close = np.allclose(np.asarray(pipe.state.sketch.table),
+                    np.asarray(sync.state.sketch.table), atol=1e-3)
+print(f"per-shard sub-planes collapse (merge) to the fan-in state: {close}")
+
+s = pipe.sample(8)
+print("per-request top tokens (WOR ell_1 over the sharded stream):")
+for b in range(B):
+    pairs = [f"{int(t)}:{f:.0f}" for t, f in
+             zip(np.asarray(s.keys)[b], np.asarray(s.freqs)[b]) if t >= 0]
+    print(f"  req {b}: {' '.join(pairs)}")
+for eng in (sync, asyn, pipe):
+    eng.plane.close()

@@ -90,6 +90,48 @@ def key_hash_to_domain(keys: jnp.ndarray, salt, n: int) -> jnp.ndarray:
     return (hash_u32(keys, salt) % jnp.uint32(n)).astype(jnp.int32)
 
 
+_SHARD_SALT = _np.uint32(0x5A17AB1E)  # dedicated stream-partition salt
+
+
+def _mix32_np(x: "_np.ndarray") -> "_np.ndarray":
+    """Host-side numpy mirror of ``_mix32`` (bit-identical on uint32)."""
+    x = _np.asarray(x, _np.uint32)
+    x = x ^ (x >> _np.uint32(16))
+    x = (x * _M1).astype(_np.uint32)
+    x = x ^ (x >> _np.uint32(15))
+    x = (x * _M2).astype(_np.uint32)
+    x = x ^ (x >> _np.uint32(16))
+    return x
+
+
+def hash_u32_np(keys, salt) -> "_np.ndarray":
+    """Host-side numpy mirror of ``hash_u32``, bit-identical by test
+    (test_turnstile), so host-side partitioning decisions agree with any
+    device-side replay of the same hash."""
+    with _np.errstate(over="ignore"):
+        k = _np.asarray(keys, _np.uint32)
+        s = _np.uint32(salt)
+        return _mix32_np(_mix32_np((k + s).astype(_np.uint32)) ^
+                         _np.uint32(s * _ROW_SALT))
+
+
+def shard_of_keys(keys, num_shards: int) -> "_np.ndarray":
+    """Per-key shard id in ``[0, num_shards)`` for stream partitioning.
+
+    Pure function of the key alone (dedicated salt, no dependence on shard
+    count beyond the final modulo), so a key's updates -- insertions AND the
+    deletions that later retract them -- always land on the same shard, and
+    the union of all shards' events is the same multiset for every S.  This
+    is what makes sharded ingestion mergeable in the paper's sense: each
+    shard sketches a disjoint sub-stream and the composable merge restores
+    the full-stream sketch exactly.
+    """
+    if num_shards <= 1:
+        return _np.zeros(_np.shape(keys), _np.int64)
+    h = hash_u32_np(keys, _SHARD_SALT)
+    return (h % _np.uint32(num_shards)).astype(_np.int64)
+
+
 def seeds_concretely_differ(a, b) -> bool:
     """True when two seed arrays are concretely known to differ.
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import countsketch, worp
+from repro.core import countsketch, hashing, worp
 
 
 class ZipfStream(NamedTuple):
@@ -95,6 +95,41 @@ class TurnstileZipfStream(NamedTuple):
             k, v = self.sparse_batch_at(t, shard, n)
             np.add.at(f, k, v)
         return f
+
+    # -- shard-count-independent sharding ----------------------------------
+    #
+    # ``sparse_batch_at(step, shard, n)`` seeds each shard independently: the
+    # union of S shards' events CHANGES with S -- fine for independent
+    # workers, wrong for splitting ONE stream.  The canonical stream below
+    # is fixed (shard 0's sequence) and split by PER-KEY HASH, so the event
+    # multiset and the aggregate ground truth are identical for every S,
+    # and a key's deletions always follow its insertions onto the same
+    # shard (round-robin would violate both).
+
+    def events_at(self, step: int, n: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """The canonical (shard-count-independent) signed event sequence of
+        step ``t``: pure function of (seed, step, n) alone."""
+        return self.sparse_batch_at(step, 0, n)
+
+    def shard_batch_at(self, step: int, shard: int, num_shards: int, n: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Shard ``shard``'s slice of the canonical step-``t`` events under
+        per-key hash partitioning (``hashing.shard_of_keys``): the S slices
+        are disjoint, order-preserving, and union back to ``events_at``
+        exactly, for any S."""
+        keys, vals = self.events_at(step, n)
+        sel = hashing.shard_of_keys(keys, num_shards) == shard
+        return keys[sel], vals[sel]
+
+    def event_iterator(self, n: int, start_step: int = 0,
+                       nsteps: Optional[int] = None
+                       ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """Canonical signed-event microbatch iterator (one step each)."""
+        step = start_step
+        while nsteps is None or step < start_step + nsteps:
+            yield self.events_at(step, n)
+            step += 1
 
 
 class FrequencySketcher:

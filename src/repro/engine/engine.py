@@ -28,11 +28,14 @@ the dense-update candidate refresh -- goes through
 kernel on TPU and the bit-identical jnp oracle elsewhere.
 
 Turnstile ingest is a first-class DATA-PLANE layer (``repro.engine.planes``):
-``SketchEngine(cfg, plane="dense"|"sparse"|"async", flush=FlushPolicy(...))``
-selects how host-side microbatches reach the state -- the vmapped-jnp
-reference plane, the synchronous batched Pallas scatter plane, or the
-double-buffered asynchronous plane (worker-thread dispatch, bit-identical
-drained state under the same flush policy).
+``SketchEngine(cfg, plane="dense"|"sparse"|"async"|"pipeline",
+flush=FlushPolicy(...), plane_opts={...})`` selects how host-side
+microbatches reach the state -- the vmapped-jnp reference plane, the
+synchronous batched Pallas scatter plane, the double-buffered asynchronous
+plane (worker-thread dispatch, bit-identical drained state under the same
+flush policy), or the per-shard + collapse pipeline plane (``plane_opts=
+{"shards": S, "subplane": ...}``; merged through the sampler's composable
+merge at every read).
 """
 from __future__ import annotations
 
@@ -353,7 +356,7 @@ class SketchEngine:
 
     def __init__(self, cfg: EngineConfig, sampler: Optional[str] = None,
                  flush_elems: int = 4096, plane: str = "sparse",
-                 flush=None):
+                 flush=None, plane_opts: Optional[dict] = None):
         if sampler is not None and sampler != cfg.sampler:
             cfg = cfg._replace(sampler=sampler)
         self.cfg = cfg
@@ -364,7 +367,7 @@ class SketchEngine:
             else planes.FlushPolicy(max_elems=int(flush_elems))
         self._plane = planes.make_plane(
             plane, self.spec, self.ops.init(*derive_stream_seeds(cfg)),
-            policy=policy)
+            policy=policy, **(plane_opts or {}))
         self.pass2 = None
 
     @property

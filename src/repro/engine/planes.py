@@ -30,11 +30,25 @@ microbatches accumulate as numpy arrays (zero device work) until a
                    waits for in-flight work and flushes the tail, so any
                    read/merge/checkpoint sees a deterministic state.
 
+  ``PipelinePlane``  per-shard + collapse: the flushed batch is hash-
+                   partitioned per KEY across S sub-planes (disjoint
+                   sub-streams, identical seeds), and every state read
+                   collapses the shard states through the sampler's merge
+                   -- the paper's composability as a data plane.  Feeds
+                   either from plain ``ingest`` (self-partitioning) or
+                   pre-partitioned per-shard via ``ingest_shard`` (the
+                   ``repro.data.ingest_pipeline`` producer fast path).
+                   Equivalence to the single-plane path is KS-level, not
+                   bitwise (fp reduction order and candidate refresh order
+                   differ across the merge tree).
+
 ``FlushPolicy`` is the pluggable flush threshold: element count
 (``max_elems``), byte budget (``max_bytes``), and/or wall-clock interval
 (``max_interval``; note the interval trigger is inherently
 timing-DEPENDENT and therefore trades away the bitwise-reproducibility of
-the element/byte triggers).
+the element/byte triggers).  On the synchronous planes the interval is
+evaluated at ingest time; ``AsyncPlane`` additionally arms a timer so an
+idle producer's tail publishes within the age bound on its own.
 
 Planes are registered by name (``register_plane`` / ``make_plane`` /
 ``available_planes``) so the engine, the serving launcher (``serve
@@ -58,7 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import countsketch, tv_sampler, worp
+from repro.core import countsketch, hashing, tv_sampler, worp
 from repro.core import sampler as core_sampler
 from repro.core import transforms
 from repro.core.sampler import SamplerSpec
@@ -229,14 +243,19 @@ class FlushPolicy(NamedTuple):
     on the ingested data (timing-independent, hence bitwise-reproducible
     dispatch boundaries), while ``max_interval`` (seconds since the oldest
     pending microbatch) is wall-clock and trades that reproducibility for
-    age-bounded batches.  Triggers are evaluated AT INGEST TIME -- there is
-    no standalone timer thread, so an interval-aged buffer dispatches on
-    the next ``ingest`` (or any read, which always drains); a producer
-    that goes fully idle must ``drain()``/read to publish its tail."""
+    age-bounded batches.  On synchronous planes triggers are evaluated AT
+    INGEST TIME -- an interval-aged buffer dispatches on the next
+    ``ingest`` (or any read, which always drains).  ``AsyncPlane``
+    additionally backs ``max_interval`` with a timer, so an idle
+    producer's tail publishes within the age bound on its own."""
 
     max_elems: Optional[int] = 4096   # per-stream pending element count
     max_bytes: Optional[int] = None   # pending host-buffer bytes (keys+vals)
     max_interval: Optional[float] = None  # seconds since first pending batch
+    # max_interval on synchronous planes is evaluated at ingest time (no
+    # timer thread: an interval-aged buffer dispatches on the next ingest
+    # or read); AsyncPlane arms a timer per buffered tail, so its age bound
+    # holds even for a producer that goes fully idle.
 
     def should_flush(self, elems: int, nbytes: int, age: float) -> bool:
         if self.max_elems is not None and elems >= self.max_elems:
@@ -279,14 +298,19 @@ def available_planes() -> tuple:
 def make_plane(name: str, spec: SamplerSpec, state,
                policy: Optional[FlushPolicy] = None,
                interpret: Optional[bool] = None,
-               use_kernel: Optional[bool] = None) -> "DataPlane":
-    """Instantiate a registered plane over ``spec`` and its batched state."""
+               use_kernel: Optional[bool] = None,
+               **plane_opts) -> "DataPlane":
+    """Instantiate a registered plane over ``spec`` and its batched state.
+
+    ``plane_opts`` are plane-specific keywords forwarded to the class
+    (e.g. ``shards=`` / ``subplane=`` for the ``"pipeline"`` plane); planes
+    that take none reject extras loudly."""
     cls = _PLANES.get(name)
     if cls is None:
         raise ValueError(f"unknown data plane {name!r}; registered planes: "
                          f"{sorted(set(_PLANES))}")
     return cls(spec, state, policy=policy, interpret=interpret,
-               use_kernel=use_kernel)
+               use_kernel=use_kernel, **plane_opts)
 
 
 # ---------------------------------------------------------------------------
@@ -480,6 +504,15 @@ class AsyncPlane(SparsePlane):
     queued behind it (order preserved); the next ``drain()``/flush
     re-raises the error with those batches re-queued at the FRONT of the
     host buffer, so a retry drain replays them in the original order.
+
+    Interval trigger: with ``FlushPolicy.max_interval`` set, a one-shot
+    timer is armed whenever the host buffer becomes non-empty, so a
+    producer that goes IDLE still has its tail submitted within the age
+    bound -- no drain or read required.  A timer flush submits to the same
+    worker FIFO as an ingest-time flush, so ordering is preserved; the
+    boundary itself is wall-clock (the documented ``max_interval``
+    trade-off).  A dispatch error raised by a timer flush is parked like
+    any worker error and surfaces at the next drain/flush.
     """
 
     _QUEUE_DEPTH = 1  # + the batch the worker holds = double buffering
@@ -493,6 +526,12 @@ class AsyncPlane(SparsePlane):
         self._error: Optional[BaseException] = None
         self._parked: list = []     # batches skipped after an error, in order
         self._worker: Optional[threading.Thread] = None
+        # host-buffer guard: the interval timer fires on its own thread, so
+        # buffer mutation (ingest / flush / error requeue) is serialized.
+        # RLock: flush paths that already hold it re-enter via
+        # _raise_pending_error's requeue.
+        self._buf_lock = threading.RLock()
+        self._timer: Optional[threading.Timer] = None
 
     def _ensure_worker(self):
         if self._worker is None:
@@ -527,15 +566,72 @@ class AsyncPlane(SparsePlane):
             finally:
                 self._jobs.task_done()
 
-    def _flush_buffer(self, interpret=None, use_kernel=None):
-        self._raise_pending_error()
+    # -- interval timer ------------------------------------------------------
+    def ingest(self, keys, values):
+        with self._buf_lock:
+            super().ingest(keys, values)
+            if (self.policy.max_interval is not None and self._buf_keys
+                    and self._timer is None):
+                self._arm_timer(self.policy.max_interval)
+        return self
+
+    def drain(self, interpret=None, use_kernel=None):
+        with self._buf_lock:
+            self._cancel_timer()
+            if self._buf_keys:
+                self._flush_buffer(interpret=interpret,
+                                   use_kernel=use_kernel)
+        self._settle()
+        return self
+
+    def _arm_timer(self, delay: float):
+        t = threading.Timer(max(delay, 0.0), self._timer_fire)
+        t.daemon = True
+        self._timer = t
+        t.start()
+
+    def _cancel_timer(self):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    def _timer_fire(self):
+        with self._buf_lock:
+            self._timer = None
+            if not self._buf_keys or self.policy.max_interval is None:
+                return
+            age = time.monotonic() - self._buf_t0
+            if age < self.policy.max_interval:
+                # an ingest restarted the age clock meanwhile: re-arm for
+                # the remaining window instead of flushing early
+                self._arm_timer(self.policy.max_interval - age)
+                return
+            try:
+                # submit WITHOUT the pending-error check: a timer thread
+                # cannot surface an exception to the caller, so an earlier
+                # worker error stays parked until the next drain/flush
+                self._submit_buffer(self._interpret, self._use_kernel)
+            except Exception as e:
+                with self._lock:
+                    if self._error is None:
+                        self._error = e
+
+    # -- flush / settle ------------------------------------------------------
+    def _submit_buffer(self, interpret, use_kernel):
         self._ensure_worker()
         keys, vals = self._concat_buffer()
         self._clear_buffer()
-        self._jobs.put((keys, vals,
-                        self._interpret if interpret is None else interpret,
-                        self._use_kernel if use_kernel is None
-                        else use_kernel))
+        self._cancel_timer()
+        self._jobs.put((keys, vals, interpret, use_kernel))
+
+    def _flush_buffer(self, interpret=None, use_kernel=None):
+        self._raise_pending_error()
+        with self._buf_lock:
+            if not self._buf_keys:
+                return  # a timer flush beat this caller to the buffer
+            self._submit_buffer(
+                self._interpret if interpret is None else interpret,
+                self._use_kernel if use_kernel is None else use_kernel)
 
     def _settle(self):
         if self._worker is not None:
@@ -558,16 +654,18 @@ class AsyncPlane(SparsePlane):
             return
         # re-queue the failed + parked batches ahead of anything currently
         # buffered, preserving the original dispatch order for the retry
-        for keys, vals in reversed(parked):
-            self._buf_keys.insert(0, keys)
-            self._buf_vals.insert(0, vals)
-            self._buf_elems += keys.shape[1]
-            self._buf_bytes += keys.nbytes + vals.nbytes
-        if self._buf_t0 is None and self._buf_keys:
-            self._buf_t0 = time.monotonic()
+        with self._buf_lock:
+            for keys, vals in reversed(parked):
+                self._buf_keys.insert(0, keys)
+                self._buf_vals.insert(0, vals)
+                self._buf_elems += keys.shape[1]
+                self._buf_bytes += keys.nbytes + vals.nbytes
+            if self._buf_t0 is None and self._buf_keys:
+                self._buf_t0 = time.monotonic()
+            pending = self._buf_elems
         raise RuntimeError(
             f"async ingest dispatch failed; the failed microbatches were "
-            f"re-queued ({self._buf_elems} per-stream elements pending) -- "
+            f"re-queued ({pending} per-stream elements pending) -- "
             f"drain() again to retry") from err
 
     def close(self):
@@ -576,6 +674,8 @@ class AsyncPlane(SparsePlane):
         in-flight dispatch and exits; if it fails to stop, the plane
         refuses further use rather than risk TWO workers mutating the
         state concurrently (which would silently break bitwise parity)."""
+        with self._buf_lock:
+            self._cancel_timer()
         if self._worker is None:
             return
         self._jobs.put(None)
@@ -585,3 +685,135 @@ class AsyncPlane(SparsePlane):
                 "async plane worker did not stop within 60s (dispatch "
                 "stuck?); the plane cannot be reused safely")
         self._worker = None
+
+
+# ---------------------------------------------------------------------------
+# per-shard + collapse plane
+# ---------------------------------------------------------------------------
+
+def _compact_shard_rows(keys: np.ndarray, vals: np.ndarray,
+                        mask: np.ndarray) -> tuple:
+    """Per-row compaction of the masked slots of a (B, n) batch: selected
+    entries slide left in order, rows pad with key -1 / value 0, and the
+    column count quantizes to a lane multiple so repeated flushes of
+    similar sizes reuse one kernel trace.  Returns (keys', vals') of shape
+    (B, m_pad)."""
+    counts = mask.sum(axis=1)
+    m = int(counts.max()) if counts.size else 0
+    if m == 0:
+        return (np.empty((keys.shape[0], 0), np.int32),
+                np.empty((keys.shape[0], 0), np.float32))
+    m = ops.pad_to(m, ops.LANE)
+    # stable argsort of ~mask floats selected slots to the front, in order
+    order = np.argsort(~mask, axis=1, kind="stable")
+    take = order[:, :min(m, keys.shape[1])]
+    gk = np.take_along_axis(keys, take, axis=1)
+    gv = np.take_along_axis(vals, take, axis=1)
+    if gk.shape[1] < m:
+        gk = np.pad(gk, ((0, 0), (0, m - gk.shape[1])), constant_values=-1)
+        gv = np.pad(gv, ((0, 0), (0, m - gv.shape[1])))
+    live = np.arange(m)[None, :] < counts[:, None]
+    return (np.where(live, gk, np.int32(-1)).astype(np.int32),
+            np.where(live, gv, np.float32(0.0)).astype(np.float32))
+
+
+@register_plane("pipeline")
+class PipelinePlane(DataPlane):
+    """Per-shard + collapse plane: the sharded ingestion pipeline's dispatch
+    policy as a first-class data plane.
+
+    ``shards`` sub-planes (default 2 x the synchronous scatter plane) start
+    from the SAME initial state -- identical seeds, empty tables/candidates,
+    so the copies are merge-neutral -- and each flushed batch is partitioned
+    per KEY (``hashing.shard_of_keys``: shard-count-independent, deletions
+    follow their insertions) into disjoint sub-streams.  Every state read
+    COLLAPSES the shard states through the sampler's batched merge -- the
+    paper's composability (Sec. 1) exercised on every read, which is
+    exactly what the conformance grid pins distributionally.
+
+    Equivalence contract: KS-level against the dense/sparse single-plane
+    paths, NOT bitwise -- fp summation order and candidate-refresh order
+    differ across the merge tree (same reason the scatter kernel is
+    allclose-not-bitwise against the vmapped update).
+
+    Producer fast path: ``ingest_shard(s, keys, values)`` feeds sub-plane
+    ``s`` directly with a PRE-partitioned block (the prefetching feeder's
+    per-shard mode; safe from S producer threads as long as each shard has
+    one producer).  With ``subplane="async"`` each shard gets its own
+    double-buffered worker -- N planes dispatching concurrently, collapsed
+    at read time.
+
+    ``set_state`` routes the restored state to shard 0 and resets the other
+    shards to the construction-time initial state; the restored state must
+    be seed-compatible with it (the merge's seed check enforces this).
+    """
+
+    def __init__(self, spec, state, policy=None, interpret=None,
+                 use_kernel=None, shards: int = 2, subplane: str = "sparse"):
+        super().__init__(spec, state, policy=policy, interpret=interpret,
+                         use_kernel=use_kernel)
+        if shards < 1:
+            raise ValueError(f"pipeline plane needs shards >= 1, got {shards}")
+        if subplane == "pipeline":
+            raise ValueError("pipeline sub-planes cannot nest")
+        self.shards = int(shards)
+        self.subplane = subplane
+        self._initial = state    # merge-neutral reset state for set_state
+        self._ops = batched_ops(spec)
+        # sub-planes flush every forwarded batch: dispatch granularity is
+        # decided HERE (the outer FlushPolicy / the feeder's block size)
+        self._subplanes = [
+            make_plane(subplane, spec, state,
+                       policy=FlushPolicy(max_elems=1),
+                       interpret=interpret, use_kernel=use_kernel)
+            for _ in range(self.shards)]
+        self._merged = None      # collapse cache, invalidated by ingest
+
+    # -- partitioned dispatch ------------------------------------------------
+    def _flush_buffer(self, interpret=None, use_kernel=None):
+        keys, vals = self._concat_buffer()
+        shard_ids = hashing.shard_of_keys(keys, self.shards)
+        live = keys != np.int32(-1)
+        for s, sub in enumerate(self._subplanes):
+            k, v = _compact_shard_rows(keys, vals, (shard_ids == s) & live)
+            if k.shape[1]:
+                sub.ingest(k, v)
+        self._clear_buffer()
+        self._merged = None
+
+    def ingest_shard(self, shard: int, keys, values):
+        """Feed one PRE-partitioned block straight to sub-plane ``shard``
+        (every key must hash to ``shard``; -1 padding slots exempt).  This
+        bypasses the outer buffer/policy -- the caller owns the dispatch
+        granularity -- and is the only plane entry point that is safe to
+        call from per-shard producer threads concurrently."""
+        self._merged = None
+        self._subplanes[shard].ingest(keys, values)
+        return self
+
+    # -- collapse ------------------------------------------------------------
+    def _settle(self):
+        for sub in self._subplanes:
+            sub.drain()
+
+    @property
+    def state(self):
+        """The collapsed (merged-across-shards) settled state."""
+        self._settle()
+        if self._merged is None:
+            merged = self._subplanes[0].state
+            for sub in self._subplanes[1:]:
+                merged = self._ops.merge(merged, sub.state)
+            self._merged = merged
+        return self._merged
+
+    def set_state(self, st):
+        self._settle()
+        self._subplanes[0].set_state(st)
+        for sub in self._subplanes[1:]:
+            sub.set_state(self._initial)
+        self._merged = None
+
+    def close(self):
+        for sub in self._subplanes:
+            sub.close()

@@ -27,6 +27,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
 
+from . import tiling
+from .tiling import pad_to as _pad_to
+
 
 def _kernel(meta_ref, keys_ref, table_ref, out_ref, *, rows: int, width: int,
             block_w: int, block_k: int):
@@ -57,10 +60,6 @@ def _kernel(meta_ref, keys_ref, table_ref, out_ref, *, rows: int, width: int,
     out_ref[...] += jnp.concatenate(ests, axis=0)  # (rows, K)
 
 
-def _pad_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
 @functools.partial(
     jax.jit, static_argnames=("block_w", "interpret")
 )
@@ -68,15 +67,14 @@ def countsketch_query(
     table: jnp.ndarray,
     keys: jnp.ndarray,
     seed,
-    block_w: int = 2048,
+    block_w: int = tiling.SINGLE_BLOCK_W,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Per-row signed bucket reads: returns (rows, k) estimates."""
     rows, width = table.shape
     k = keys.shape[0]
-    k_pad = _pad_to(max(k, 128), 128)
-    block_w = min(block_w, _pad_to(width, 128))
-    w_pad = _pad_to(width, block_w)
+    k_pad = _pad_to(max(k, tiling.LANE), tiling.LANE)
+    block_w, w_pad = tiling.fit_block(block_w, width)
     keys_p = jnp.pad(jnp.asarray(keys, jnp.int32).reshape(1, -1),
                      ((0, 0), (0, k_pad - k)))
     table_p = jnp.pad(table, ((0, 0), (0, w_pad - width)))
@@ -153,8 +151,8 @@ def countsketch_query_batched(
     tables: jnp.ndarray,   # (B, rows, width) per-stream tables
     keys: jnp.ndarray,     # (B, k) per-stream key batches
     seeds: jnp.ndarray,    # (B,) per-stream hash seeds
-    block_w: int = 1024,
-    block_b: int = 8,
+    block_w: int = tiling.BLOCK_W,
+    block_b: int = tiling.BLOCK_B,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Per-row signed bucket reads for B streams in ONE pallas_call.
@@ -165,11 +163,9 @@ def countsketch_query_batched(
     """
     B, rows, width = tables.shape
     k = keys.shape[1]
-    k_pad = _pad_to(max(k, 128), 128)
-    block_w = min(block_w, _pad_to(width, 128))
-    w_pad = _pad_to(width, block_w)
-    block_b = min(block_b, _pad_to(B, 8))
-    b_pad = _pad_to(B, block_b)
+    k_pad = _pad_to(max(k, tiling.LANE), tiling.LANE)
+    block_w, w_pad = tiling.fit_block(block_w, width)
+    block_b, b_pad = tiling.fit_block(block_b, B, tile=tiling.SUBLANE)
 
     keys_p = jnp.pad(jnp.asarray(keys, jnp.int32),
                      ((0, b_pad - B), (0, k_pad - k)))

@@ -38,16 +38,17 @@ from jax.experimental import pallas as pl
 from repro.core import transforms
 from repro.core import hashing
 
-# meta-table layout + padding/broadcast prologue shared with the dense
-# kernel: defined ONCE in countsketch_update.py so the two data planes
-# cannot desynchronize (the scatter kernel simply never reads _META_BASE).
+# meta-table layout + broadcast prologue shared with the dense kernel:
+# defined ONCE in countsketch_update.py so the two data planes cannot
+# desynchronize (the scatter kernel simply never reads _META_BASE); the
+# block/padding arithmetic is the library-wide tiling helper.
+from . import tiling
 from .countsketch_update import (
     _META_COLS,
     _META_N,
     _META_SEED,
     _META_TSEED,
     _broadcast_stream_params,
-    _pad_to,
     _stream_meta,
 )
 
@@ -118,9 +119,9 @@ def countsketch_scatter_batched(
     scheme: str = transforms.PPSWOR,
     transform_seeds=None,
     lengths=None,
-    block_n: int = 512,
-    block_w: int = 1024,
-    block_b: int = 8,
+    block_n: int = tiling.BLOCK_N,
+    block_w: int = tiling.BLOCK_W,
+    block_b: int = tiling.BLOCK_B,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Scatter B sparse signed streams in ONE pallas_call; (B, rows, width).
@@ -137,12 +138,9 @@ def countsketch_scatter_batched(
     seeds, transform_seeds, lengths = _broadcast_stream_params(
         B, n, seeds, transform_seeds, lengths)
 
-    block_w = min(block_w, _pad_to(width, 128))
-    block_n = min(block_n, _pad_to(n, 128))
-    block_b = min(block_b, _pad_to(B, 8))
-    n_pad = _pad_to(n, block_n)
-    w_pad = _pad_to(width, block_w)
-    b_pad = _pad_to(B, block_b)
+    block_w, w_pad = tiling.fit_block(block_w, width)
+    block_n, n_pad = tiling.fit_block(block_n, n)
+    block_b, b_pad = tiling.fit_block(block_b, B, tile=tiling.SUBLANE)
 
     # padded slots get key -1 => masked inside the kernel
     keys_p = jnp.pad(jnp.asarray(keys, jnp.int32),

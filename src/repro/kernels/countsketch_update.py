@@ -44,6 +44,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing, transforms
 
+from . import tiling
+
 
 def _kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
             block_n: int, block_w: int, p: float | None, scheme: str):
@@ -92,10 +94,6 @@ def _kernel(meta_ref, vals_ref, table_ref, *, rows: int, width: int,
     table_ref[...] += jnp.concatenate(contribs, axis=0)  # (rows, WB)
 
 
-def _pad_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("rows", "width", "p", "scheme", "block_n", "block_w",
@@ -110,8 +108,8 @@ def countsketch_update(
     scheme: str = transforms.PPSWOR,
     transform_seed=0,
     base_key=0,
-    block_n: int = 1024,
-    block_w: int = 2048,
+    block_n: int = tiling.SINGLE_BLOCK_N,
+    block_w: int = tiling.SINGLE_BLOCK_W,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Sketch a dense vector segment; returns the (rows, width) table.
@@ -122,10 +120,8 @@ def countsketch_update(
     on real TPU pass ``interpret=False``.
     """
     n = values.shape[0]
-    block_w = min(block_w, _pad_to(width, 128))
-    block_n = min(block_n, _pad_to(n, 128))
-    n_pad = _pad_to(n, block_n)
-    w_pad = _pad_to(width, block_w)
+    block_w, w_pad = tiling.fit_block(block_w, width)
+    block_n, n_pad = tiling.fit_block(block_n, n)
     vals = jnp.pad(values.reshape(1, -1), ((0, 0), (0, n_pad - n)))
     meta = jnp.array(
         [jnp.uint32(seed).astype(jnp.int32),
@@ -251,9 +247,9 @@ def countsketch_update_batched(
     transform_seeds=None,
     base_keys=None,
     lengths=None,
-    block_n: int = 512,
-    block_w: int = 1024,
-    block_b: int = 8,
+    block_n: int = tiling.BLOCK_N,
+    block_w: int = tiling.BLOCK_W,
+    block_b: int = tiling.BLOCK_B,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Sketch B dense vector segments in ONE pallas_call; (B, rows, width).
@@ -271,12 +267,9 @@ def countsketch_update_batched(
         base_keys = jnp.zeros((B,), jnp.uint32)
     base_keys = jnp.broadcast_to(jnp.asarray(base_keys, jnp.uint32), (B,))
 
-    block_w = min(block_w, _pad_to(width, 128))
-    block_n = min(block_n, _pad_to(n, 128))
-    block_b = min(block_b, _pad_to(B, 8))
-    n_pad = _pad_to(n, block_n)
-    w_pad = _pad_to(width, block_w)
-    b_pad = _pad_to(B, block_b)
+    block_w, w_pad = tiling.fit_block(block_w, width)
+    block_n, n_pad = tiling.fit_block(block_n, n)
+    block_b, b_pad = tiling.fit_block(block_b, B, tile=tiling.SUBLANE)
 
     vals = jnp.pad(values, ((0, b_pad - B), (0, n_pad - n)))
     meta = _stream_meta(b_pad, seeds, transform_seeds, lengths,

@@ -27,6 +27,21 @@ from .countsketch_query import (
 )
 from .ppswor_transform import ppswor_transform as _transform
 
+# block-size selection / padding arithmetic: the single source of truth for
+# kernel grid tiling, re-exported here so host-side callers (the packing
+# layer of repro.data.ingest_pipeline, benchmarks) size their buffers to
+# the exact shapes the kernels will run -- one trace per stream, no re-pad.
+from .tiling import (  # noqa: F401  (public re-exports)
+    BLOCK_B,
+    BLOCK_N,
+    BLOCK_W,
+    LANE,
+    SUBLANE,
+    fit_block,
+    packed_span,
+    pad_to,
+)
+
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"

@@ -16,6 +16,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
 
+from . import tiling
+
 
 def _kernel(meta_ref, keys_ref, vals_ref, out_ref, *, p: float):
     tseed = meta_ref[0].astype(jnp.uint32)
@@ -25,10 +27,6 @@ def _kernel(meta_ref, keys_ref, vals_ref, out_ref, *, p: float):
     out_ref[...] = vals * (r ** jnp.float32(-1.0 / p)).astype(vals.dtype)
 
 
-def _pad_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
 @functools.partial(jax.jit,
                    static_argnames=("p", "block_n", "interpret"))
 def ppswor_transform(
@@ -36,13 +34,12 @@ def ppswor_transform(
     values: jnp.ndarray,
     p: float,
     transform_seed,
-    block_n: int = 4096,
+    block_n: int = tiling.TRANSFORM_BLOCK_N,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Transformed values, same shape/dtype as ``values``."""
     n = values.shape[0]
-    block_n = min(block_n, _pad_to(n, 128))
-    n_pad = _pad_to(n, block_n)
+    block_n, n_pad = tiling.fit_block(block_n, n)
     keys_p = jnp.pad(jnp.asarray(keys, jnp.int32).reshape(1, -1),
                      ((0, 0), (0, n_pad - n)))
     vals_p = jnp.pad(values.reshape(1, -1), ((0, 0), (0, n_pad - n)))

@@ -1,0 +1,55 @@
+"""Shared grid-tiling / padding arithmetic for the WORp Pallas kernels.
+
+Every kernel wrapper needs the same prologue: clamp the requested block
+size to the (tile-padded) dimension, then pad the dimension to a whole
+number of blocks.  Before this module each wrapper carried its own
+``_pad_to`` copy (dense update, query, transform) and the block defaults
+lived in per-function signatures; the host-side packing layer
+(``repro.data.ingest_pipeline``) needs the SAME arithmetic to emit
+fixed-shape blocks that feed the scatter grid without recompilation.  So
+the selection logic is defined exactly once here and re-exported through
+``kernels.ops`` for host-side callers.
+
+TPU register tiling: the lane (minor) dimension of a vector register is
+128 wide and the sublane dimension 8 deep -- block dimensions that map to
+lanes pad to ``LANE``, batch/sublane dimensions to ``SUBLANE``.
+"""
+from __future__ import annotations
+
+LANE = 128
+SUBLANE = 8
+
+# canonical block defaults of the batched (batch, width, n) kernel grids --
+# the scatter/update data plane and the query plane share these.
+BLOCK_N = 512
+BLOCK_W = 1024
+BLOCK_B = 8
+
+# single-stream kernels have no batch dimension competing for VMEM, so they
+# afford larger tiles.
+SINGLE_BLOCK_N = 1024
+SINGLE_BLOCK_W = 2048
+# the standalone transform is elementwise (no table resident in VMEM).
+TRANSFORM_BLOCK_N = 4096
+
+
+def pad_to(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def fit_block(block: int, dim: int, tile: int = LANE) -> tuple:
+    """The universal kernel-wrapper prologue: clamp ``block`` to the
+    tile-padded ``dim`` and pad ``dim`` to a whole number of blocks.
+    Returns ``(block, dim_pad)`` with ``dim_pad % block == 0``."""
+    block = min(block, pad_to(dim, tile))
+    return block, pad_to(dim, block)
+
+
+def packed_span(n: int, block_n: int = BLOCK_N, tile: int = LANE) -> int:
+    """Element capacity of a fixed-shape host block covering ``n`` events
+    with zero kernel-side re-padding: the returned span is already a whole
+    number of (clamped) n-blocks, so a batcher that always emits this shape
+    hits ONE kernel trace for the whole stream."""
+    _, n_pad = fit_block(block_n, max(int(n), 1), tile)
+    return n_pad

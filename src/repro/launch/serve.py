@@ -31,6 +31,12 @@ distributed reduction layer (host-form ``butterfly_allmerge`` for
 power-of-two worker counts, ``tree_merge`` otherwise) and the aggregated
 per-request samples equal a single worker that saw the whole stream --
 the paper's composability, end to end.
+
+Sharded analytics ingest (``--producers S``): each worker's analytics
+plane becomes the ingestion pipeline's ``pipeline`` plane -- updates
+partition per-key-hash across S sub-planes (each wrapping ``--plane``)
+and collapse through the sampler's composable merge at sampling time,
+the serving-side face of ``repro.data.ingest_pipeline``.
 """
 import argparse
 
@@ -47,13 +53,17 @@ from repro.models import transformer as T
 
 
 def make_worker_engines(cfg: EngineConfig, workers: int, plane: str = "sparse",
-                        flush_elems: int = 4096) -> list:
+                        flush_elems: int = 4096,
+                        plane_opts: dict = None) -> list:
     """N mergeable engine shards: identical EngineConfig => identical
     per-stream hash/transform seeds, so stream b of every worker is a shard
-    of request b's logical stream (the ``merge_with`` contract)."""
+    of request b's logical stream (the ``merge_with`` contract).
+    ``plane_opts`` forwards plane-specific options (e.g. ``shards`` /
+    ``subplane`` for the ingestion pipeline's ``pipeline`` plane)."""
     if workers < 1:
         raise ValueError(f"workers must be >= 1, got {workers}")
-    return [SketchEngine(cfg, plane=plane, flush_elems=flush_elems)
+    return [SketchEngine(cfg, plane=plane, flush_elems=flush_elems,
+                         plane_opts=plane_opts)
             for _ in range(workers)]
 
 
@@ -118,6 +128,12 @@ def main():
                          "round-robin across N engines whose per-request "
                          "samples aggregate through the distributed merge "
                          "trees at reporting time")
+    ap.add_argument("--producers", type=int, default=1,
+                    help="analytics ingest producers per worker: S > 1 "
+                         "wraps the selected --plane in the sharded "
+                         "ingestion pipeline's 'pipeline' plane (per-key "
+                         "hash partition across S sub-planes, collapsed "
+                         "through the sampler merge at sampling time)")
     args = ap.parse_args()
     if args.worp_topk < 0:
         ap.error("--worp-topk must be >= 0")
@@ -127,6 +143,11 @@ def main():
         ap.error("--worp-window must be >= 0")
     if args.workers < 1:
         ap.error("--workers must be >= 1")
+    if args.producers < 1:
+        ap.error("--producers must be >= 1")
+    if args.producers > 1 and args.plane == "pipeline":
+        ap.error("--producers already wraps --plane in the pipeline plane; "
+                 "pick the SUB-plane (sparse/async/dense) with --plane")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -168,7 +189,12 @@ def main():
             candidates=4 * args.worp_topk, p=args.worp_p, seed=0x5EED,
             sampler=args.sampler, domain=cfg.vocab_size,
             num_samplers=max(4, args.worp_topk))
-        engines = make_worker_engines(ecfg, args.workers, plane=args.plane)
+        plane, plane_opts = args.plane, None
+        if args.producers > 1:
+            plane = "pipeline"
+            plane_opts = {"shards": args.producers, "subplane": args.plane}
+        engines = make_worker_engines(ecfg, args.workers, plane=plane,
+                                      plane_opts=plane_opts)
 
         def ingest_step(t):
             widx = nstep % len(engines)

@@ -12,7 +12,10 @@ the corpus the model is actually seeing) at sketch cost, not vocab cost.
 ``analytics_plane`` picks the engine data plane; the default ``"async"``
 double-buffers the scatter dispatch on a worker thread so token analytics
 never stall the training step (drained deterministically at the final
-``sample``, bit-identical to the sync plane).
+``sample``, bit-identical to the sync plane).  ``analytics_producers`` > 1
+additionally shards the token feed per-key across S producer sub-planes
+(the sharded ingestion pipeline's ``PipelinePlane``), collapsing through
+the sampler's composable merge at sampling time.
 """
 from __future__ import annotations
 
@@ -49,6 +52,7 @@ def run_training(
     analytics_sampler: Optional[str] = None,
     analytics_topk: int = 16,
     analytics_plane: str = "async",
+    analytics_producers: int = 1,
 ) -> Dict[str, Any]:
     """Train ``cfg`` on the synthetic Zipf stream.  Returns final metrics."""
     key = jax.random.PRNGKey(seed)
@@ -78,14 +82,25 @@ def run_training(
             print_fn(f"[ckpt] resumed from step {rstep}")
 
     analytics = None
+    if analytics_producers < 1:
+        raise ValueError(
+            f"analytics_producers must be >= 1, got {analytics_producers}")
     if analytics_sampler is not None:
-        # one engine stream over the whole token stream; any registry sampler
+        # one engine stream over the whole token stream; any registry sampler.
+        # analytics_producers > 1 shards the token feed per-key across S
+        # producer sub-planes (plane="pipeline" wrapping analytics_plane);
+        # the sub-sketches collapse through the sampler merge at sample()
+        plane, plane_opts = analytics_plane, None
+        if analytics_producers > 1:
+            plane = "pipeline"
+            plane_opts = {"shards": analytics_producers,
+                          "subplane": analytics_plane}
         analytics = SketchEngine(EngineConfig(
             num_streams=1, rows=5, width=max(256, 31 * analytics_topk),
             candidates=4 * analytics_topk, capacity=4 * analytics_topk,
             seed=seed ^ 0x70CEB5, sampler=analytics_sampler,
             domain=cfg.vocab_size, num_samplers=max(4, analytics_topk)),
-            plane=analytics_plane)
+            plane=plane, plane_opts=plane_opts)
 
     watchdog = StragglerWatchdog(threshold=3.0)
     losses = []

@@ -1,0 +1,444 @@
+"""Sharded prefetching ingestion pipeline contracts (ISSUE 7).
+
+Layers under test:
+  * sharding determinism: per-key hash partitioning is shard-count
+    independent -- the S shard slices are disjoint, order-preserving, and
+    union back to the canonical stream (same aggregate ground truth) for
+    every S; the host-side numpy hash mirror is bit-identical to the
+    device-side jnp hash;
+  * packing: ``PackedBatcher`` emits only fixed-shape kernel-tiling-sized
+    blocks, preserves event order exactly, pads only the tail (key -1 /
+    value 0 -- the library-wide padding contract), and accounts pack
+    efficiency;
+  * fan-in determinism: ``PrefetchingFeeder``'s round-robin consumption
+    order is producer-timing-free, so a threaded feed into the async plane
+    is BITWISE equal to the synchronous plane fed the same stream, and
+    interleaving caller ``update()`` between pumps equals the in-order
+    oracle;
+  * backpressure: bounded rings block producers (never drop), a
+    zero-prefetch feeder degenerates to a rendezvous hand-off, a producer
+    raising mid-stream surfaces at the drain boundary with every worker
+    thread exited (no deadlock), and ``close()`` unblocks stalled
+    producers.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as E
+from repro.core import hashing
+from repro.data.ingest_pipeline import (PackedBatcher, PrefetchingFeeder,
+                                        ShardedSource)
+from repro.data.pipeline import TurnstileZipfStream
+from repro.kernels import ops as kops
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 3
+
+
+def _cfg(**kw):
+    base = dict(num_streams=B, rows=3, width=128, candidates=64, capacity=64,
+                p=1.0, seed=11, sampler="onepass", domain=4096,
+                num_samplers=3)
+    base.update(kw)
+    return E.EngineConfig(**base)
+
+
+def _stream(seed=7):
+    return TurnstileZipfStream(vocab_size=2000, alpha=1.2, seed=seed)
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+class TestShardingDeterminism:
+    def test_numpy_hash_mirrors_jnp_bitwise(self):
+        rng = np.random.default_rng(0)
+        keys = rng.integers(-(2**31), 2**31, 4096).astype(np.int32)
+        for salt in (0, 1, 0x5A17AB1E, 0xDEADBEEF):
+            got = hashing.hash_u32_np(keys, salt)
+            want = np.asarray(hashing.hash_u32(jnp.asarray(keys),
+                                               jnp.uint32(salt)))
+            assert got.dtype == np.uint32
+            assert np.array_equal(got, want), f"salt={salt:#x}"
+
+    def test_shard_ids_in_range_and_trivial_case(self):
+        keys = np.arange(1000, dtype=np.int32)
+        assert np.all(hashing.shard_of_keys(keys, 1) == 0)
+        for s in (2, 3, 4, 7):
+            ids = hashing.shard_of_keys(keys, s)
+            assert ids.min() >= 0 and ids.max() < s
+            # every shard is actually populated (hash spreads keys)
+            assert len(np.unique(ids)) == s
+
+    @pytest.mark.parametrize("num_shards", [1, 2, 4])
+    def test_shard_union_is_canonical_stream(self, num_shards):
+        """Property: for every S the shard slices are disjoint,
+        order-preserving, and union back EXACTLY to the canonical
+        shard-count-independent event sequence."""
+        stream = _stream()
+        for step in range(4):
+            ck, cv = stream.events_at(step, 256)
+            seen = np.zeros(ck.size, bool)
+            for s in range(num_shards):
+                k, v = stream.shard_batch_at(step, s, num_shards, 256)
+                idx = np.flatnonzero(
+                    hashing.shard_of_keys(ck, num_shards) == s)
+                assert np.array_equal(k, ck[idx])   # order-preserving slice
+                assert np.array_equal(v, cv[idx])
+                assert not seen[idx].any()           # disjoint
+                seen[idx] = True
+            assert seen.all()                        # exhaustive
+
+    @pytest.mark.parametrize("num_shards", [1, 2, 4])
+    def test_aggregate_ground_truth_invariant_in_S(self, num_shards):
+        """The summed per-shard aggregates equal the canonical aggregate:
+        the sharded sketches' merged ground truth doesn't depend on S."""
+        stream = _stream()
+        nsteps, n = 6, 200
+        want = np.zeros(stream.vocab_size)
+        for t in range(nsteps):
+            k, v = stream.events_at(t, n)
+            np.add.at(want, k, v)
+        got = np.zeros(stream.vocab_size)
+        for s in range(num_shards):
+            for t in range(nsteps):
+                k, v = stream.shard_batch_at(t, s, num_shards, n)
+                np.add.at(got, k, v)
+        assert np.array_equal(got, want)
+
+    def test_deletions_follow_insertions_onto_same_shard(self):
+        """Per-shard partial aggregates stay individually consistent: a
+        retraction always lands on the shard holding the insertion, so no
+        shard's aggregate can go negative on this nonnegative stream."""
+        stream = _stream()
+        S = 4
+        agg = [np.zeros(stream.vocab_size) for _ in range(S)]
+        for t in range(8):
+            for s in range(S):
+                k, v = stream.shard_batch_at(t, s, S, 128)
+                np.add.at(agg[s], k, v)
+        for s in range(S):
+            assert agg[s].min() >= 0.0
+
+    def test_sharded_source_matches_shard_batch_at(self):
+        stream = _stream()
+        src = ShardedSource.from_turnstile(stream, n=128, num_shards=3,
+                                           nsteps=5)
+        for s in range(3):
+            got = list(src.shard_events(s))
+            assert len(got) == 5
+            for t, (k, v) in enumerate(got):
+                wk, wv = stream.shard_batch_at(t, s, 3, 128)
+                assert np.array_equal(k, wk)
+                assert np.array_equal(v, wv)
+
+    def test_sharded_source_validates(self):
+        with pytest.raises(ValueError, match="num_shards"):
+            ShardedSource([], num_shards=0)
+        src = ShardedSource([], num_shards=2)
+        with pytest.raises(ValueError, match="out of range"):
+            next(src.shard_events(2))
+
+
+class TestPackedBatcher:
+    def test_span_is_kernel_tiling_quantized(self):
+        b = PackedBatcher(block_elems=300, streams=2)
+        assert b.span == kops.packed_span(300)
+        assert b.span % kops.LANE == 0
+
+    def test_blocks_fixed_shape_and_order_preserving(self):
+        b = PackedBatcher(block_elems=128, streams=2)
+        rng = np.random.default_rng(1)
+        fed_k, fed_v, out = [], [], []
+        for size in (37, 200, 5, 91, 260, 1):
+            k = rng.integers(0, 1 << 20, size).astype(np.int32)
+            v = rng.normal(size=size).astype(np.float32)
+            fed_k.append(k)
+            fed_v.append(v)
+            out += b.add(k, v)
+        tail = b.flush_tail()
+        if tail is not None:
+            out.append(tail)
+        for bk, bv in out:
+            assert bk.shape == bv.shape == (2, b.span)
+            assert bk.dtype == np.int32 and bv.dtype == np.float32
+            assert np.array_equal(bk[0], bk[1])  # broadcast across streams
+        # concatenated live slots reproduce the fed stream IN ORDER
+        allk = np.concatenate([bk[0] for bk, _ in out])
+        allv = np.concatenate([bv[0] for _, bv in out])
+        live = allk != -1
+        assert np.array_equal(allk[live], np.concatenate(fed_k))
+        assert np.array_equal(allv[live], np.concatenate(fed_v))
+        # padding only in the tail, value 0 at padded slots
+        assert np.all(allv[~live] == 0.0)
+        assert b.events == sum(k.size for k in fed_k)
+        assert b.blocks == len(out)
+        assert b.pack_efficiency == b.events / (b.blocks * b.span)
+
+    def test_empty_and_full_blocks_have_no_padding(self):
+        b = PackedBatcher(block_elems=128, streams=1)
+        assert b.flush_tail() is None
+        blocks = b.add(np.arange(2 * b.span, dtype=np.int32),
+                       np.ones(2 * b.span, np.float32))
+        assert len(blocks) == 2
+        assert b.flush_tail() is None       # nothing buffered
+        assert b.pack_efficiency == 1.0
+        assert b.pad_slots == 0
+
+    def test_validates(self):
+        with pytest.raises(ValueError, match="block_elems"):
+            PackedBatcher(block_elems=0)
+        b = PackedBatcher(block_elems=64)
+        with pytest.raises(ValueError, match="mismatch"):
+            b.add(np.arange(3, dtype=np.int32), np.ones(4, np.float32))
+
+
+class TestFeederDeterminism:
+    """Fan-in round-robin order is producer-timing-free: threaded feeds are
+    bitwise equal to the synchronous reference, for sync AND async sinks."""
+
+    def _events(self, nsteps=10, n=220):
+        return list(_stream().event_iterator(n, nsteps=nsteps))
+
+    def _reference(self, cfg, evs, shards, block_elems=256):
+        """The deterministic block sequence, fed synchronously."""
+        eng = E.SketchEngine(cfg, plane="sparse", flush_elems=1)
+        src = ShardedSource(evs, num_shards=shards)
+        per = []
+        for s in range(shards):
+            b = PackedBatcher(block_elems, streams=B)
+            blks = []
+            for k, v in src.shard_events(s):
+                blks += b.add(k, v)
+            tail = b.flush_tail()
+            if tail is not None:
+                blks.append(tail)
+            per.append(blks)
+        done, idx = [False] * shards, [0] * shards
+        while not all(done):
+            for s in range(shards):
+                if done[s]:
+                    continue
+                if idx[s] < len(per[s]):
+                    eng.ingest(*per[s][idx[s]])
+                    idx[s] += 1
+                else:
+                    done[s] = True
+        eng.flush()
+        return eng
+
+    @pytest.mark.parametrize("plane", ["sparse", "async"])
+    def test_fanin_bitwise_vs_sync_reference(self, plane):
+        cfg = _cfg()
+        evs = self._events()
+        ref = self._reference(cfg, evs, shards=4)
+        eng = E.SketchEngine(cfg, plane=plane, flush_elems=1)
+        stats = PrefetchingFeeder(ShardedSource(evs, num_shards=4), eng,
+                                  block_elems=256, prefetch=2).run()
+        assert stats.events == sum(k.size for k, _ in evs)
+        assert _leaves_equal(eng.state, ref.state)
+        assert np.array_equal(np.asarray(eng.sample(8).keys),
+                              np.asarray(ref.sample(8).keys))
+        eng.plane.close()
+        ref.plane.close()
+
+    def test_packing_preserves_dense_plane_semantics(self):
+        """Packed + sharded + threaded is a pure re-batching: same tables
+        (fp tolerance) and same WOR sample keys as the dense reference fed
+        the raw ragged stream."""
+        cfg = _cfg()
+        evs = self._events(nsteps=6)
+        dense = E.SketchEngine(cfg, plane="dense", flush_elems=1)
+        for k, v in evs:
+            dense.ingest(np.broadcast_to(k[None], (B, k.size)),
+                         np.broadcast_to(v[None], (B, v.size)))
+        dense.flush()
+        eng = E.SketchEngine(cfg, plane="sparse", flush_elems=1)
+        PrefetchingFeeder(ShardedSource(evs, num_shards=4), eng,
+                          block_elems=256).run()
+        want = np.asarray(dense.state.sketch.table)
+        np.testing.assert_allclose(
+            np.asarray(eng.state.sketch.table), want, rtol=1e-4,
+            atol=1e-5 * max(1.0, float(np.abs(want).max())))
+        assert np.array_equal(np.asarray(eng.sample(8).keys),
+                              np.asarray(dense.sample(8).keys))
+
+    def test_interleaved_update_while_producers_active(self):
+        """Caller update() between pump() calls applies in call order: the
+        threaded interleaving equals the sequential oracle."""
+        cfg = _cfg()
+        evs = self._events(nsteps=8)
+        rng = np.random.default_rng(3)
+        uk = rng.integers(0, 2000, (B, 16)).astype(np.int32)
+        uv = rng.normal(size=(B, 16)).astype(np.float32)
+
+        eng = E.SketchEngine(cfg, plane="sparse", flush_elems=1)
+        feeder = PrefetchingFeeder(ShardedSource(evs, num_shards=4), eng,
+                                   block_elems=256, prefetch=1)
+        feeder.start()
+        moved = feeder.pump(max_blocks=1)
+        assert moved == 1
+        eng.update(uk, uv)          # producers still running
+        feeder.pump()
+        feeder.finish()
+
+        # oracle: same deterministic block order, update after block 0
+        ref = E.SketchEngine(cfg, plane="sparse", flush_elems=1)
+        src = ShardedSource(evs, num_shards=4)
+        per = []
+        for s in range(4):
+            b = PackedBatcher(256, streams=B)
+            blks = []
+            for k, v in src.shard_events(s):
+                blks += b.add(k, v)
+            t = b.flush_tail()
+            if t is not None:
+                blks.append(t)
+            per.append(blks)
+        done, idx, count = [False] * 4, [0] * 4, 0
+        while not all(done):
+            for s in range(4):
+                if done[s]:
+                    continue
+                if idx[s] < len(per[s]):
+                    ref.ingest(*per[s][idx[s]])
+                    idx[s] += 1
+                    count += 1
+                    if count == 1:
+                        ref.update(uk, uv)
+                else:
+                    done[s] = True
+        ref.flush()
+        assert _leaves_equal(eng.state, ref.state)
+
+    def test_pershard_collapse_matches_reference(self):
+        """Per-shard producers -> PipelinePlane sub-planes -> merge collapse
+        equals the single-plane aggregate to fp tolerance (distribution-
+        level equivalence is pinned by the conformance ``pipeline`` path)."""
+        cfg = _cfg()
+        evs = self._events(nsteps=6)
+        ref = self._reference(cfg, evs, shards=4)
+        eng = E.SketchEngine(cfg, plane="pipeline", flush_elems=1,
+                             plane_opts={"shards": 4})
+        PrefetchingFeeder(ShardedSource(evs, num_shards=4), eng,
+                          block_elems=256, pershard=True).run()
+        want = np.asarray(ref.state.sketch.table)
+        np.testing.assert_allclose(
+            np.asarray(eng.state.sketch.table), want, rtol=1e-4,
+            atol=1e-5 * max(1.0, float(np.abs(want).max())))
+        eng.plane.close()
+        ref.plane.close()
+
+    def test_pershard_requires_pipeline_plane(self):
+        eng = E.SketchEngine(_cfg(), plane="sparse")
+        with pytest.raises(ValueError, match="PipelinePlane"):
+            PrefetchingFeeder(ShardedSource([], num_shards=2), eng,
+                              pershard=True)
+        pipe = E.SketchEngine(_cfg(), plane="pipeline",
+                              plane_opts={"shards": 3})
+        with pytest.raises(ValueError, match="shard-count mismatch"):
+            PrefetchingFeeder(ShardedSource([], num_shards=2), pipe,
+                              pershard=True)
+
+
+class TestBackpressure:
+    def _events(self, nsteps=6, n=200):
+        return list(_stream().event_iterator(n, nsteps=nsteps))
+
+    def test_zero_prefetch_is_rendezvous_and_lossless(self):
+        """prefetch=0 degenerates to a single hand-off slot per shard;
+        everything still arrives, in the deterministic order."""
+        cfg = _cfg()
+        evs = self._events()
+        feeder = PrefetchingFeeder(ShardedSource(evs, num_shards=2),
+                                   E.SketchEngine(cfg, plane="sparse",
+                                                  flush_elems=1),
+                                   block_elems=256, prefetch=0)
+        assert all(r.maxsize == 1 for r in feeder._rings)
+        stats = feeder.run()
+        assert stats.events == sum(k.size for k, _ in evs)
+        ref = PrefetchingFeeder(ShardedSource(evs, num_shards=2),
+                                E.SketchEngine(cfg, plane="sparse",
+                                               flush_elems=1),
+                                block_elems=256, prefetch=8)
+        ref.run()
+        assert _leaves_equal(feeder.sink.state, ref.sink.state)
+
+    def test_producers_block_on_full_ring_never_drop(self):
+        """With no consumer, producers stall at ring capacity (bounded
+        memory); once pumped, every event still arrives."""
+        evs = self._events(nsteps=8)
+        eng = E.SketchEngine(_cfg(), plane="sparse", flush_elems=1)
+        feeder = PrefetchingFeeder(ShardedSource(evs, num_shards=2), eng,
+                                   block_elems=128, prefetch=1)
+        feeder.start()
+        deadline = 5.0
+        t0 = time.monotonic()
+        while (any(r.qsize() < 1 for r in feeder._rings)
+               and time.monotonic() - t0 < deadline):
+            time.sleep(0.01)
+        assert all(r.qsize() >= 1 for r in feeder._rings)  # full, stalled
+        assert all(t.is_alive() for t in feeder._threads)  # blocked, alive
+        feeder.pump()
+        stats = feeder.finish()
+        assert stats.events == sum(k.size for k, _ in evs)
+        assert stats.producer_wait_s > 0.0
+
+    def test_producer_error_surfaces_at_drain_no_deadlock(self):
+        """A producer raising mid-stream: the error re-raises at the drain
+        boundary wrapped with the shard id, every worker thread exits, and
+        already-dispatched blocks remain applied."""
+        good = self._events(nsteps=3)
+
+        def poisoned():
+            yield from good
+            raise ValueError("upstream store fell over")
+
+        eng = E.SketchEngine(_cfg(), plane="sparse", flush_elems=1)
+        feeder = PrefetchingFeeder(ShardedSource(poisoned, num_shards=3),
+                                   eng, block_elems=128)
+        with pytest.raises(RuntimeError, match="producer shard"):
+            feeder.run()
+        for t in feeder._threads:
+            t.join(timeout=5.0)
+            assert not t.is_alive()
+        # the sink is not poisoned: delivered prefix applied, still usable
+        assert not np.all(np.asarray(eng.flush().state.sketch.table) == 0.0)
+        assert eng.sample(4).keys.shape == (B, 4)
+
+    def test_close_unblocks_stalled_producers(self):
+        """Abandoning a run (consumer never pumps) must not leak blocked
+        threads: close() drains the rings and joins the producers."""
+        evs = self._events(nsteps=8)
+        feeder = PrefetchingFeeder(
+            ShardedSource(evs, num_shards=2),
+            E.SketchEngine(_cfg(), plane="sparse", flush_elems=1),
+            block_elems=128, prefetch=1)
+        feeder.start()
+        feeder.close()
+        assert all(not t.is_alive() for t in feeder._threads)
+
+    def test_empty_source(self):
+        eng = E.SketchEngine(_cfg(), plane="sparse", flush_elems=1)
+        stats = PrefetchingFeeder(ShardedSource([], num_shards=2), eng,
+                                  block_elems=128).run()
+        assert stats.events == 0 and stats.blocks == 0
+        assert stats.pack_efficiency == 1.0
+
+    def test_feeder_validates(self):
+        eng = E.SketchEngine(_cfg(), plane="sparse")
+        with pytest.raises(ValueError, match="prefetch"):
+            PrefetchingFeeder(ShardedSource([], num_shards=1), eng,
+                              prefetch=-1)
+        feeder = PrefetchingFeeder(ShardedSource([], num_shards=1), eng)
+        feeder.run()
+        with pytest.raises(RuntimeError, match="already started"):
+            feeder.start()

@@ -103,7 +103,7 @@ class TestFlushPolicy:
 class TestPlaneRegistry:
     def test_available_planes(self):
         names = E.available_planes()
-        assert ("dense", "sparse", "async") == names
+        assert ("dense", "sparse", "async", "pipeline") == names
 
     def test_ingest_alias_resolves_to_sparse(self):
         cfg = _cfg("onepass")
@@ -118,7 +118,8 @@ class TestPlaneRegistry:
         with pytest.raises(ValueError, match="unknown data plane"):
             E.SketchEngine(cfg, plane="warp")
 
-    @pytest.mark.parametrize("plane", ["dense", "sparse", "async"])
+    @pytest.mark.parametrize("plane", ["dense", "sparse", "async",
+                                       "pipeline"])
     def test_engine_end_to_end_on_every_plane(self, plane):
         cfg = _cfg("onepass")
         keys, vals = _sparse(seed=3)
@@ -128,7 +129,8 @@ class TestPlaneRegistry:
         assert s.keys.shape == (B, 4)
         assert eng.plane.name == plane
 
-    @pytest.mark.parametrize("plane", ["dense", "sparse", "async"])
+    @pytest.mark.parametrize("plane", ["dense", "sparse", "async",
+                                       "pipeline"])
     @pytest.mark.parametrize("name", ["onepass", "perfect"])
     def test_padding_keys_contribute_nothing(self, name, plane):
         """keys == -1 slots are padding on EVERY plane (the dense plane
@@ -494,6 +496,159 @@ class TestMultiWorkerServe:
 
         with pytest.raises(ValueError, match="workers"):
             serve.make_worker_engines(_cfg("onepass"), 0)
+
+
+class TestAsyncTimerFlush:
+    """ISSUE 7 satellite: a STALLED producer must not strand buffered
+    microbatches.  With ``FlushPolicy.max_interval`` set, the async plane
+    arms a timer at first buffered ingest and fires the coalesced dispatch
+    itself once the buffer's age crosses the interval -- no further
+    ingest/drain call required."""
+
+    def test_stalled_producer_flushes_on_interval(self):
+        import time as _time
+
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=30, n=12)
+        eng = E.SketchEngine(cfg, plane="async", flush=P.FlushPolicy(
+            max_elems=None, max_interval=0.05))
+        eng.ingest(keys, vals)   # under every ingest-path trigger; stall now
+        deadline = _time.monotonic() + 10.0
+        while _time.monotonic() < deadline:
+            # .state settles in-flight work but does NOT flush the host
+            # buffer -- only the timer can have dispatched this batch
+            if not np.all(np.asarray(eng.state.sketch.table) == 0.0):
+                break
+            _time.sleep(0.01)
+        assert eng.pending == 0, "timer never fired for a stalled producer"
+        ref = E.SketchEngine(cfg, plane="sparse")
+        ref.ingest(keys, vals)
+        ref.flush()
+        _assert_trees_equal(eng.state, ref.state)
+        eng.plane.close()
+
+    def test_timer_does_not_fire_early(self):
+        import time as _time
+
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=31, n=12)
+        eng = E.SketchEngine(cfg, plane="async", flush=P.FlushPolicy(
+            max_elems=None, max_interval=30.0))
+        eng.ingest(keys, vals)
+        _time.sleep(0.15)
+        assert eng.pending == keys.shape[1]   # still buffered
+        eng.plane.close()
+
+    def test_drain_cancels_timer_no_double_apply(self):
+        import time as _time
+
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=32, n=12)
+        eng = E.SketchEngine(cfg, plane="async", flush=P.FlushPolicy(
+            max_elems=None, max_interval=0.05))
+        eng.ingest(keys, vals)
+        eng.flush()                         # beats the timer
+        _time.sleep(0.2)                    # timer window passes
+        ref = E.SketchEngine(cfg, plane="sparse")
+        ref.ingest(keys, vals)
+        ref.flush()
+        _assert_trees_equal(eng.state, ref.state)  # applied exactly once
+        eng.ingest(keys, vals)              # plane still healthy
+        eng.flush()
+        assert eng.pending == 0
+        eng.plane.close()
+
+
+class TestPipelinePlane:
+    """Sharded ingestion plane (ISSUE 7): per-key-hash partitioned
+    sub-planes whose states collapse through the sampler's composable
+    merge on every read -- the in-process model of S producers feeding S
+    sketch shards."""
+
+    def _tol(self, want):
+        return dict(rtol=1e-4,
+                    atol=1e-5 * max(1.0, float(np.abs(want).max())))
+
+    @pytest.mark.parametrize("name", ["onepass", "perfect"])
+    def test_collapse_matches_sparse_plane(self, name):
+        cfg = _cfg(name)
+        keys, vals = _sparse(seed=33, n=64)
+        ref = E.SketchEngine(cfg, plane="sparse", flush_elems=16)
+        pipe = E.SketchEngine(cfg, plane="pipeline", flush_elems=16,
+                              plane_opts={"shards": 3})
+        for lo in range(0, 64, 16):
+            ref.ingest(keys[:, lo:lo + 16], vals[:, lo:lo + 16])
+            pipe.ingest(keys[:, lo:lo + 16], vals[:, lo:lo + 16])
+        ref.flush()
+        pipe.flush()
+        for w, g in zip(jax.tree_util.tree_leaves(ref.state),
+                        jax.tree_util.tree_leaves(pipe.state)):
+            w, g = np.asarray(w), np.asarray(g)
+            if np.issubdtype(w.dtype, np.floating):
+                np.testing.assert_allclose(g, w, **self._tol(w))
+        _assert_samples_bitwise(ref.sample(4), pipe.sample(4), name)
+        pipe.plane.close()
+
+    def test_ingest_shard_equals_hash_partition(self):
+        """Pre-partitioned direct feed (one producer per shard) is bitwise
+        equal to letting the plane partition the same stream itself."""
+        from repro.core import hashing
+
+        cfg = _cfg("onepass")
+        spec = E.engine_spec(cfg)
+        keys, vals = _sparse(seed=34, n=48)
+        a = P.make_plane("pipeline", spec, E.init_batched(cfg), shards=2)
+        b = P.make_plane("pipeline", spec, E.init_batched(cfg), shards=2)
+        a.ingest(keys, vals)
+        a.drain()
+        for s in range(2):
+            mask = (hashing.shard_of_keys(keys, 2) == s) & (keys != -1)
+            ck, cv = P._compact_shard_rows(keys, vals, mask)
+            if ck.shape[1]:
+                b.ingest_shard(s, ck, cv)
+        b.drain()
+        _assert_trees_equal(a.state, b.state)
+        a.close()
+        b.close()
+
+    def test_async_subplane_matches_sparse_subplane(self):
+        """The plane composes: async sub-planes (per-shard worker threads)
+        collapse to the same state as sync sub-planes, bitwise -- the
+        sub-plane parity contract survives the partition."""
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=35, n=64)
+        engs = []
+        for sub in ("sparse", "async"):
+            eng = E.SketchEngine(cfg, plane="pipeline", flush_elems=16,
+                                 plane_opts={"shards": 3, "subplane": sub})
+            eng.ingest(keys, vals)
+            eng.flush()
+            engs.append(eng)
+        _assert_trees_equal(engs[0].state, engs[1].state)
+        _assert_samples_bitwise(engs[0].sample(4), engs[1].sample(4))
+        for eng in engs:
+            eng.plane.close()
+
+    def test_set_state_roundtrip(self):
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=36, n=40)
+        src = E.SketchEngine(cfg, plane="sparse")
+        src.ingest(keys, vals)
+        src.flush()
+        pipe = E.SketchEngine(cfg, plane="pipeline",
+                              plane_opts={"shards": 3})
+        pipe.state = src.state   # restore into shard 0; others stay init
+        _assert_samples_bitwise(src.sample(4), pipe.sample(4))
+        pipe.plane.close()
+
+    def test_rejects_nesting_and_bad_shards(self):
+        cfg = _cfg("onepass")
+        spec = E.engine_spec(cfg)
+        with pytest.raises(ValueError, match="nest"):
+            P.make_plane("pipeline", spec, E.init_batched(cfg),
+                         subplane="pipeline")
+        with pytest.raises(ValueError, match="shards"):
+            P.make_plane("pipeline", spec, E.init_batched(cfg), shards=0)
 
 
 class TestAsyncThreadHygiene:
