@@ -1,0 +1,93 @@
+"""Fleet load generator: routing latency + aggregated-sample throughput
+for the multi-process serving fleet under synthetic Zipf traffic.
+
+Reports, per replica count:
+
+  ``fleet_load_route_R<N>``   median route() microseconds with
+                              ``p50_ms= p99_ms= events_per_s=`` derived
+                              from the coordinator's per-route latencies
+  ``fleet_load_sample_R<N>``  microseconds per aggregated sample() --
+                              publish + CRC-verified restore + merge tree
+                              + batched sample -- with ``samples_per_s=``
+
+Both rows sit behind the same parity-guard pattern as the other
+benchmarks: before anything is timed, the aggregated fleet sample must be
+BITWISE equal to the single-process ``fleet`` data plane fed the identical
+stream (``parity=bitwise`` in the derived column; CI greps it).  A parity
+failure raises instead of emitting numbers -- a fast fleet that returns
+the wrong sample is not a result.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.pipeline import TurnstileZipfStream
+from repro.distributed import fleet as F
+from repro.engine import EngineConfig
+from repro.launch.fleet_serve import traffic
+
+from .common import emit
+
+
+def _engine_cfg(requests: int, k: int) -> EngineConfig:
+    return EngineConfig(
+        num_streams=requests, rows=5, width=max(256, 31 * k),
+        candidates=4 * k, capacity=4 * k, p=1.0, seed=0x5EED,
+        sampler="onepass", domain=4096, num_samplers=max(4, k))
+
+
+def run(verbose: bool = True, fast: bool = False, replicas: int = 2,
+        requests: int = 8, k: int = 8) -> list:
+    steps = 12 if fast else 48
+    batch = 16
+    ecfg = _engine_cfg(requests, k)
+    fcfg = F.FleetConfig(engine=ecfg, replicas=replicas,
+                         publish_every=max(2, steps // 4))
+    stream = TurnstileZipfStream(vocab_size=ecfg.domain, alpha=1.3, seed=0)
+    batches = traffic(stream, requests, steps, batch)
+    events = sum(kk.shape[0] * kk.shape[1] for kk, _ in batches)
+
+    with F.FleetCoordinator(fcfg) as co:
+        t0 = time.perf_counter()
+        for keys, vals in batches:
+            co.route(keys, vals)
+        route_wall = time.perf_counter() - t0
+        sample = co.sample(k)  # warm: compiles merge/sample paths
+        # parity guard BEFORE timing: the aggregated sample must equal the
+        # single-process fleet-plane reference bit for bit
+        ref = F.reference_sample(ecfg, batches, replicas, k)
+        if not (np.array_equal(np.asarray(sample.keys), np.asarray(ref.keys))
+                and np.array_equal(np.asarray(sample.freqs),
+                                   np.asarray(ref.freqs))):
+            raise AssertionError(
+                "fleet_load: aggregated fleet sample diverged from the "
+                "single-process fleet-plane reference (bitwise parity)")
+        sample_ts = []
+        for _ in range(2 if fast else 3):
+            t0 = time.perf_counter()
+            co.sample(k)
+            sample_ts.append(time.perf_counter() - t0)
+        stats = co.stats
+
+    p50_ms = stats.latency_percentile(50) * 1e3
+    p99_ms = stats.latency_percentile(99) * 1e3
+    route_us = float(np.median(np.asarray(stats.route_s)) * 1e6)
+    sample_s = float(np.median(sample_ts))
+    rows = [
+        (f"fleet_load_route_R{replicas}", route_us,
+         f"p50_ms={p50_ms:.2f} p99_ms={p99_ms:.2f} "
+         f"events_per_s={events / max(route_wall, 1e-9):.0f} "
+         f"steps={steps} restarts={stats.restarts} parity=bitwise"),
+        (f"fleet_load_sample_R{replicas}", sample_s * 1e6,
+         f"samples_per_s={requests * k / max(sample_s, 1e-9):.1f} "
+         f"requests={requests} k={k} parity=bitwise"),
+    ]
+    if verbose:
+        emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

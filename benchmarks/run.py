@@ -15,8 +15,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (engine_throughput, fig1_wor_vs_wr, fig2_rankfreq,
-                   gradcomp_comm, ingest_pipeline, psi_calibration,
-                   sketch_throughput, table3_nrmse)
+                   fleet_load, gradcomp_comm, ingest_pipeline,
+                   psi_calibration, sketch_throughput, table3_nrmse)
     from .common import emit
 
     rows = []
@@ -36,6 +36,9 @@ def main() -> None:
     rows += r; emit(r)
     print("== Sharded prefetching ingestion pipeline ==")
     r = ingest_pipeline.run(verbose=False, fast=args.fast)
+    rows += r; emit(r)
+    print("== Multi-process serving fleet load ==")
+    r = fleet_load.run(verbose=False, fast=args.fast)
     rows += r; emit(r)
     print("== WORp gradient compression (Sec. 1 application) ==")
     r = gradcomp_comm.run(verbose=False); rows += r; emit(r)

@@ -226,6 +226,28 @@ def tree_merge(states: Sequence, merge_fn):
     return states[0]
 
 
+def merge_states(states: Sequence, merge_fn):
+    """Collapse a host-side list of composable shard states through the
+    cheapest applicable merge tree: the hypercube butterfly for
+    power-of-two shard counts, the pairwise log-depth tree otherwise.
+
+    This is THE selection rule for every host-form aggregation point
+    (multi-worker serving, the fleet coordinator's checkpoint merge, the
+    ``fleet`` data plane), so they all share one seed-agreement contract:
+    shards whose uint32 seed leaves concretely disagree raise a
+    descriptive ValueError instead of silently merging garbage.
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("merge_states of no states")
+    if len(states) == 1:
+        _check_shard_seeds(states)  # degenerate fleet: still validated
+        return states[0]
+    if len(states) & (len(states) - 1) == 0:  # power of two: butterfly
+        return butterfly_allmerge(states, None, merge_fn)
+    return tree_merge(states, merge_fn)
+
+
 def _check_partner_seeds(a, b, round_idx: int) -> None:
     """butterfly_allmerge's per-round mirror of the ``tree_merge`` guard:
     the XOR-partner's uint32 seed leaves must agree with ours before the

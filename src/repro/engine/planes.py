@@ -532,6 +532,14 @@ class AsyncPlane(SparsePlane):
         # _raise_pending_error's requeue.
         self._buf_lock = threading.RLock()
         self._timer: Optional[threading.Timer] = None
+        # close() guard for the interval timer: Timer.cancel() cannot stop a
+        # callback that already started and is blocked on _buf_lock, so a
+        # timer racing close() could otherwise resurrect the worker after
+        # shutdown (or enqueue a batch behind the exit sentinel, silently
+        # dropping it).  _timer_fire checks the flag under _buf_lock; an
+        # explicit later ingest() clears it (planes stay reusable after a
+        # clean close).
+        self._closed = False
 
     def _ensure_worker(self):
         if self._worker is None:
@@ -569,6 +577,7 @@ class AsyncPlane(SparsePlane):
     # -- interval timer ------------------------------------------------------
     def ingest(self, keys, values):
         with self._buf_lock:
+            self._closed = False  # explicit reuse after close() reopens
             super().ingest(keys, values)
             if (self.policy.max_interval is not None and self._buf_keys
                     and self._timer is None):
@@ -598,6 +607,12 @@ class AsyncPlane(SparsePlane):
     def _timer_fire(self):
         with self._buf_lock:
             self._timer = None
+            if self._closed:
+                # lost the race with close(): the cancel() missed us because
+                # we were already running, but dispatching now would push
+                # work into a shut-down plane -- the tail stays buffered for
+                # an explicit drain/reuse instead
+                return
             if not self._buf_keys or self.policy.max_interval is None:
                 return
             age = time.monotonic() - self._buf_t0
@@ -676,6 +691,7 @@ class AsyncPlane(SparsePlane):
         state concurrently (which would silently break bitwise parity)."""
         with self._buf_lock:
             self._cancel_timer()
+            self._closed = True  # fences any timer already past cancel()
         if self._worker is None:
             return
         self._jobs.put(None)
@@ -715,6 +731,27 @@ def _compact_shard_rows(keys: np.ndarray, vals: np.ndarray,
     live = np.arange(m)[None, :] < counts[:, None]
     return (np.where(live, gk, np.int32(-1)).astype(np.int32),
             np.where(live, gv, np.float32(0.0)).astype(np.float32))
+
+
+def partition_by_key(keys: np.ndarray, vals: np.ndarray,
+                     shards: int) -> list:
+    """Hash-partition one (B, n) microbatch into ``shards`` compacted
+    per-shard blocks ``[(keys_s, vals_s), ...]`` (``hashing.shard_of_keys``
+    per key; ``keys == -1`` padding slots belong to no shard).  Sticky by
+    key hash and shard-count-independent, so a key's deletions always land
+    on the shard that saw its insertions.
+
+    This is THE routing function: ``PipelinePlane`` uses it at every flush
+    boundary and the multi-process fleet router
+    (``repro.distributed.fleet``) uses the very same code path, which is
+    what makes the fleet bitwise-reproducible against the in-process
+    ``"fleet"`` plane -- identical partition, identical compacted block
+    shapes, identical per-shard dispatch sequences.
+    """
+    shard_ids = hashing.shard_of_keys(keys, shards)
+    live = keys != np.int32(-1)
+    return [_compact_shard_rows(keys, vals, (shard_ids == s) & live)
+            for s in range(shards)]
 
 
 @register_plane("pipeline")
@@ -772,10 +809,8 @@ class PipelinePlane(DataPlane):
     # -- partitioned dispatch ------------------------------------------------
     def _flush_buffer(self, interpret=None, use_kernel=None):
         keys, vals = self._concat_buffer()
-        shard_ids = hashing.shard_of_keys(keys, self.shards)
-        live = keys != np.int32(-1)
-        for s, sub in enumerate(self._subplanes):
-            k, v = _compact_shard_rows(keys, vals, (shard_ids == s) & live)
+        for sub, (k, v) in zip(self._subplanes,
+                               partition_by_key(keys, vals, self.shards)):
             if k.shape[1]:
                 sub.ingest(k, v)
         self._clear_buffer()
@@ -817,3 +852,12 @@ class PipelinePlane(DataPlane):
     def close(self):
         for sub in self._subplanes:
             sub.close()
+
+
+# The serving fleet's in-process data-path model registers itself as the
+# "fleet" plane (replica-sharded ingest collapsed through the checkpoint
+# merge protocol).  Imported LAST so the registry order -- and with it the
+# conformance PATHS grid -- is deterministic no matter which module pulls
+# the plane layer in first.  The import is cycle-safe: fleet.py only needs
+# names defined above this line at its import time.
+from repro.distributed import fleet as _fleet  # noqa: E402,F401

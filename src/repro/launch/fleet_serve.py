@@ -1,0 +1,152 @@
+"""Serving-fleet launcher: N replica PROCESSES, chaos-ready.
+
+    PYTHONPATH=src python -m repro.launch.fleet_serve --replicas 3 \
+        --requests 4 --steps 24 --batch 8 --topk 6
+
+Where ``serve --workers N`` shards engines inside one process, this
+launcher runs the real thing (``repro.distributed.fleet``): N spawned
+replica processes each owning a SketchEngine shard, a health-aware router
+partitioning synthetic Zipf turnstile traffic sticky-by-key-hash, and the
+checkpoint-file merge protocol collapsing the replica shards through the
+distributed merge trees at sampling time.  Traffic is the paper's
+turnstile model (``data.pipeline.TurnstileZipfStream``): every step
+inserts fresh Zipf draws per request stream and retracts a slice of the
+previous step's -- the windowed-retraction workload the sticky routing
+exists for (a key's deletions must land on the replica that saw its
+insertions).
+
+Chaos knobs script a mid-stream fault into one replica (``--kill-after``,
+``--hang-after``, ``--delay``): the router detects the failure (ack
+timeout -> probe -> backoff), respawns the replica from its last published
+checkpoint, and replays the journaled suffix.  ``--verify`` re-runs the
+identical stream through the single-process ``fleet`` data plane and
+asserts the aggregated samples match BITWISE -- the same parity contract
+``tests/test_fleet.py`` enforces under pytest.
+
+The run ends with per-request top-K tokens plus one greppable summary row:
+
+    fleet_serve_summary,replicas=...,restarts=...,p50_ms=...,p99_ms=...
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import sampler as core_sampler
+from repro.data.pipeline import TurnstileZipfStream
+from repro.distributed import fleet as F
+from repro.engine import EngineConfig
+
+
+def traffic(stream: TurnstileZipfStream, requests: int, steps: int,
+            batch: int) -> list:
+    """(B, n) signed microbatches: request b plays shard b of the turnstile
+    Zipf stream (per-step inserts + previous-step retractions), stacked so
+    every step is one routed microbatch across all request streams."""
+    out = []
+    for t in range(steps):
+        ks, vs = zip(*(stream.sparse_batch_at(t, b, batch)
+                       for b in range(requests)))
+        out.append((np.stack(ks).astype(np.int32),
+                    np.stack(vs).astype(np.float32)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="replica processes (power of two merges via the "
+                         "host butterfly, anything else via the tree)")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="request streams (engine num_streams)")
+    ap.add_argument("--steps", type=int, default=24,
+                    help="routed microbatches")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="fresh Zipf insertions per request per step")
+    ap.add_argument("--topk", type=int, default=6)
+    ap.add_argument("--p", type=float, default=1.0)
+    ap.add_argument("--alpha", type=float, default=1.3,
+                    help="Zipf exponent of the synthetic traffic")
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sampler", default="onepass",
+                    choices=core_sampler.available())
+    ap.add_argument("--publish-every", type=int, default=4,
+                    help="replica batches between checkpoint publishes "
+                         "(the replay window after a crash)")
+    ap.add_argument("--kill-replica", type=int, default=-1,
+                    help="replica id to fault-inject (-1 = none)")
+    ap.add_argument("--kill-after", type=int, default=0,
+                    help="kill the faulted replica after N ingests")
+    ap.add_argument("--hang-after", type=int, default=0,
+                    help="hang the faulted replica after N ingests")
+    ap.add_argument("--delay", type=float, default=0.0,
+                    help="injected per-ingest latency on the faulted replica")
+    ap.add_argument("--ack-timeout", type=float, default=10.0)
+    ap.add_argument("--verify", action="store_true",
+                    help="assert bitwise parity of the aggregated sample "
+                         "against the single-process fleet plane")
+    args = ap.parse_args()
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.kill_replica >= args.replicas:
+        ap.error("--kill-replica out of range")
+
+    ecfg = EngineConfig(
+        num_streams=args.requests, rows=5,
+        width=max(256, 31 * args.topk), candidates=4 * args.topk,
+        capacity=4 * args.topk, p=args.p, seed=0x5EED ^ args.seed,
+        sampler=args.sampler, domain=args.vocab,
+        num_samplers=max(4, args.topk))
+    fcfg = F.FleetConfig(engine=ecfg, replicas=args.replicas,
+                         publish_every=args.publish_every,
+                         ack_timeout=args.ack_timeout,
+                         ping_timeout=min(5.0, args.ack_timeout))
+    faults = {}
+    if args.kill_replica >= 0:
+        faults[args.kill_replica] = F.FaultPlan(
+            kill_after=args.kill_after or None,
+            hang_after=args.hang_after or None,
+            delay_s=args.delay)
+
+    stream = TurnstileZipfStream(vocab_size=args.vocab, alpha=args.alpha,
+                                 seed=args.seed)
+    batches = traffic(stream, args.requests, args.steps, args.batch)
+
+    t0 = time.perf_counter()
+    with F.FleetCoordinator(fcfg, faults=faults) as co:
+        t_up = time.perf_counter() - t0
+        for keys, vals in batches:
+            co.route(keys, vals)
+        sample = co.sample(args.topk)
+        stats = co.stats
+    wall = time.perf_counter() - t0
+
+    keys, freqs = np.asarray(sample.keys), np.asarray(sample.freqs)
+    print(f"per-request top-{args.topk} tokens over {args.steps} turnstile "
+          f"steps ({args.replicas} replica processes, {args.sampler}):")
+    for b in range(args.requests):
+        pairs = [f"{int(t)}:{f:.0f}" for t, f in zip(keys[b], freqs[b])
+                 if t >= 0]
+        print(f"  req {b}: {' '.join(pairs)}")
+
+    if args.verify:
+        ref = F.reference_sample(ecfg, batches, args.replicas, args.topk)
+        ok = (np.array_equal(keys, np.asarray(ref.keys))
+              and np.array_equal(freqs, np.asarray(ref.freqs)))
+        if not ok:
+            raise SystemExit("PARITY FAIL: fleet sample != single-process "
+                             "fleet-plane reference")
+        print("parity=bitwise (vs single-process fleet plane)")
+
+    p50 = stats.latency_percentile(50) * 1e3
+    p99 = stats.latency_percentile(99) * 1e3
+    print(f"fleet_serve_summary,replicas={args.replicas},"
+          f"steps={args.steps},restarts={stats.restarts},"
+          f"retries={stats.retries},probes={stats.probes},"
+          f"startup_s={t_up:.1f},p50_ms={p50:.2f},p99_ms={p99:.2f},"
+          f"events_per_s={stats.routed_events / max(wall - t_up, 1e-9):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -83,12 +83,7 @@ def aggregate_worker_states(workers: list):
                 f"worker {i} config differs from worker 0; shards must "
                 f"share an EngineConfig to be mergeable")
     states = [w.flush().state for w in workers]
-    if len(states) == 1:
-        return states[0]
-    merge = workers[0].ops.merge
-    if len(states) & (len(states) - 1) == 0:  # power of two: butterfly
-        return shd.butterfly_allmerge(states, None, merge)
-    return shd.tree_merge(states, merge)
+    return shd.merge_states(states, workers[0].ops.merge)
 
 
 def sample_aggregated(workers: list, k: int):

@@ -5,6 +5,9 @@ Tiers (see also pytest.ini, whose addopts deselect the slow tiers):
   * @pytest.mark.deep  -- full statistical-conformance / kernel grids with
     large Monte-Carlo trial counts; nightly CI (`pytest -m deep`).
   * @pytest.mark.bench -- benchmark-style timing tests; opt-in only.
+  * @pytest.mark.chaos -- multi-process fleet fault-injection suite
+    (process spawns + scripted kill/hang/delay faults; seed-matrixed in
+    CI via FLEET_CHAOS_SEED, `pytest -m chaos`).
 
 NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see the
 single real CPU device; only launch/dryrun.py requests 512 host devices.
@@ -22,6 +25,11 @@ def pytest_configure(config):
         "markers",
         "bench: benchmark-style timing tests (opt-in; deselected from "
         "tier-1 by pytest.ini addopts)")
+    config.addinivalue_line(
+        "markers",
+        "chaos: multi-process fleet fault-injection tests (slow process "
+        "spawns; seed-matrixed in CI, deselected from tier-1 by "
+        "pytest.ini addopts)")
 
 
 @pytest.fixture
