@@ -9,6 +9,12 @@ Reports, per replica count:
   ``fleet_load_sample_R<N>``  microseconds per aggregated sample() --
                               publish + CRC-verified restore + merge tree
                               + batched sample -- with ``samples_per_s=``
+                              plus the comm-volume columns ``pub_bytes=``
+                              (total bytes replicas published over the
+                              run, coordinator-accounted) and
+                              ``bytes_per_ckpt=`` (the per-publish wire
+                              image; the comm_volume benchmark sweeps the
+                              same number across codecs)
 
 Both rows sit behind the same parity-guard pattern as the other
 benchmarks: before anything is timed, the aggregated fleet sample must be
@@ -82,7 +88,10 @@ def run(verbose: bool = True, fast: bool = False, replicas: int = 2,
          f"steps={steps} restarts={stats.restarts} parity=bitwise"),
         (f"fleet_load_sample_R{replicas}", sample_s * 1e6,
          f"samples_per_s={requests * k / max(sample_s, 1e-9):.1f} "
-         f"requests={requests} k={k} parity=bitwise"),
+         f"requests={requests} k={k} "
+         f"pub_bytes={stats.published_bytes} "
+         f"bytes_per_ckpt={stats.published_bytes / max(stats.publishes, 1):.0f} "
+         f"parity=bitwise"),
     ]
     if verbose:
         emit(rows)

@@ -14,9 +14,10 @@ def main() -> None:
                     help="fewer Monte Carlo runs")
     args = ap.parse_args()
 
-    from . import (engine_throughput, fig1_wor_vs_wr, fig2_rankfreq,
-                   fleet_load, gradcomp_comm, ingest_pipeline,
-                   psi_calibration, sketch_throughput, table3_nrmse)
+    from . import (comm_volume, engine_throughput, fig1_wor_vs_wr,
+                   fig2_rankfreq, fleet_load, gradcomp_comm,
+                   ingest_pipeline, psi_calibration, sketch_throughput,
+                   table3_nrmse)
     from .common import emit
 
     rows = []
@@ -39,6 +40,9 @@ def main() -> None:
     rows += r; emit(r)
     print("== Multi-process serving fleet load ==")
     r = fleet_load.run(verbose=False, fast=args.fast)
+    rows += r; emit(r)
+    print("== Wire-codec communication volume ==")
+    r = comm_volume.run(verbose=False, fast=args.fast)
     rows += r; emit(r)
     print("== WORp gradient compression (Sec. 1 application) ==")
     r = gradcomp_comm.run(verbose=False); rows += r; emit(r)

@@ -127,6 +127,12 @@ class FleetConfig(NamedTuple):
     # env forced into replica processes (spawn inherits os.environ):
     # analytics replicas are host/CPU tier by default
     child_env: Tuple[Tuple[str, str], ...] = (("JAX_PLATFORM_NAME", "cpu"),)
+    # wire codec for published checkpoints (repro.distributed.codecs):
+    # replicas commit ENCODED leaves (CRC over encoded bytes), the
+    # coordinator restores+decodes before the merge.  Seed/key leaves stay
+    # lossless under every codec, so the corrupt-shard and seed-guard
+    # rejection contracts are codec-independent.
+    codec: str = "none"
 
 
 class FleetStats:
@@ -139,6 +145,8 @@ class FleetStats:
         self.routed_batches = 0  # non-empty per-replica blocks dispatched
         self.routed_events = 0   # per-stream elements routed (sum of n)
         self.route_s: list = []  # wall-clock per route() call
+        self.publishes = 0       # confirmed checkpoint publishes
+        self.published_bytes = 0  # wire bytes across all publishes (encoded)
 
     def latency_percentile(self, q: float) -> float:
         if not self.route_s:
@@ -151,7 +159,8 @@ class FleetStats:
 # ---------------------------------------------------------------------------
 
 def _replica_main(rid: int, ecfg: EngineConfig, plane: str, ckpt_dir: str,
-                  cmd_q, out_q, fault: FaultPlan) -> None:
+                  cmd_q, out_q, fault: FaultPlan,
+                  codec: str = "none") -> None:
     """One replica: a SketchEngine shard behind a command queue.
 
     ``flush_elems=1`` dispatches every routed block at its own boundary --
@@ -208,10 +217,12 @@ def _replica_main(rid: int, ecfg: EngineConfig, plane: str, ckpt_dir: str,
                 rogue = SketchEngine(
                     ecfg._replace(seed=int(ecfg.seed) ^ 0x0BAD5EED))
                 st = rogue.state
-            path = checkpoint.save(ckpt_dir, applied, st)
+            path = checkpoint.save(ckpt_dir, applied, st, codec=codec)
             if fault.corrupt_publish:
                 _flip_committed_byte(path)
-            out_q.put(("published", applied))
+            # the confirmation carries the wire size of the committed
+            # (encoded) payload so the coordinator can account comm volume
+            out_q.put(("published", applied, checkpoint.payload_nbytes(path)))
         else:
             out_q.put(("error", f"unknown command {op!r}"))
 
@@ -344,7 +355,7 @@ class FleetCoordinator:
         r.proc = self._ctx.Process(
             target=_replica_main,
             args=(r.rid, self.cfg.engine, self.cfg.plane, r.ckpt_dir,
-                  r.cmd_q, r.out_q, fault),
+                  r.cmd_q, r.out_q, fault, self.cfg.codec),
             name=f"repro-fleet-replica-{r.rid}", daemon=True)
         with _forced_env(self.cfg.child_env):
             r.proc.start()
@@ -507,6 +518,9 @@ class FleetCoordinator:
                 r.outstanding.popleft()
         elif kind == "published":
             r.published = max(r.published, int(msg[1]))
+            if len(msg) > 2:  # wire bytes of the committed encoded payload
+                self.stats.publishes += 1
+                self.stats.published_bytes += int(msg[2])
             # the journal only needs to cover un-committed suffix
             r.journal = [e for e in r.journal if e[0] > r.published]
             if r.outstanding and r.outstanding[0][0] == "publish":
@@ -625,12 +639,12 @@ class FleetPlane(planes.PipelinePlane):
 
     def __init__(self, spec, state, policy=None, interpret=None,
                  use_kernel=None, replicas: int = 2,
-                 subplane: str = "sparse"):
+                 subplane: str = "sparse", codec: str = "none"):
         if subplane == "fleet":
             raise ValueError("fleet sub-planes cannot nest")
         super().__init__(spec, state, policy=policy, interpret=interpret,
                          use_kernel=use_kernel, shards=replicas,
-                         subplane=subplane)
+                         subplane=subplane, codec=codec)
         self.replicas = self.shards
         self._scratch: Optional[str] = None
 
@@ -643,9 +657,12 @@ class FleetPlane(planes.PipelinePlane):
 
     def _publish_roundtrip(self, shard: int, st):
         """One replica publish: commit + CRC-verified restore (step 0 is
-        overwritten per collapse, so scratch usage stays bounded)."""
+        overwritten per collapse, so scratch usage stays bounded).  With a
+        lossy codec the commit stores the ENCODED leaves -- exactly what
+        the multi-process replicas publish -- so this plane stays the
+        bitwise reference at every codec."""
         d = os.path.join(self._scratch_dir(), f"replica_{shard:02d}")
-        checkpoint.save(d, 0, st)
+        checkpoint.save(d, 0, st, codec=self.codec)
         return checkpoint.restore(d, 0, st)
 
     @property
@@ -655,6 +672,8 @@ class FleetPlane(planes.PipelinePlane):
         if self._merged is None:
             published = [self._publish_roundtrip(i, sub.state)
                          for i, sub in enumerate(self._subplanes)]
+            # no codec here: the publish round-trip above IS the wire
+            # crossing; a second application would quantize twice
             self._merged = shd.merge_states(published, self._ops.merge)
         return self._merged
 
@@ -666,13 +685,15 @@ class FleetPlane(planes.PipelinePlane):
 
 
 def reference_sample(ecfg: EngineConfig, batches, replicas: int, k: int,
-                     subplane: str = "sparse"):
+                     subplane: str = "sparse", codec: str = "none"):
     """Single-process bitwise reference for a fleet run: feed the same
     microbatch stream through the ``fleet`` plane (identical routing,
-    dispatch granularity, and merge protocol) and sample once."""
+    dispatch granularity, and merge protocol -- including the wire codec)
+    and sample once."""
     eng = SketchEngine(ecfg, flush_elems=1, plane="fleet",
                        plane_opts={"replicas": replicas,
-                                   "subplane": subplane})
+                                   "subplane": subplane,
+                                   "codec": codec})
     try:
         for keys, vals in batches:
             eng.ingest(keys, vals)

@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import hashing
+from repro.distributed import codecs as _codecs
 
 # ---------------------------------------------------------------------------
 # rule sets
@@ -206,14 +207,21 @@ def _check_shard_seeds(states: Sequence) -> None:
                     f"stream and cannot be merged")
 
 
-def tree_merge(states: Sequence, merge_fn):
+def tree_merge(states: Sequence, merge_fn, codec=None):
     """Reduce a list of composable states pairwise: ceil(log2 D) rounds.
 
     Seed agreement across shards is validated up front (see
     ``_check_shard_seeds``); the per-pair core merges re-check as they go.
+
+    ``codec`` (a name or ``repro.distributed.codecs.Codec``) models the wire
+    boundary: each shard state is encoded by the sender and decoded on
+    arrival BEFORE the seed guard + merge.  Seed/key leaves travel lossless
+    under every codec (dtype guard), so the guard semantics are unchanged;
+    ``codec=None``/``"none"`` is a copy-free identity.
     """
     merge_fn = _resolve_merge(merge_fn)
-    states = list(states)
+    cdc = _codecs.get_codec(codec)
+    states = [cdc.roundtrip(s) for s in states]
     if not states:
         raise ValueError("tree_merge of no states")
     _check_shard_seeds(states)
@@ -226,7 +234,7 @@ def tree_merge(states: Sequence, merge_fn):
     return states[0]
 
 
-def merge_states(states: Sequence, merge_fn):
+def merge_states(states: Sequence, merge_fn, codec=None):
     """Collapse a host-side list of composable shard states through the
     cheapest applicable merge tree: the hypercube butterfly for
     power-of-two shard counts, the pairwise log-depth tree otherwise.
@@ -236,16 +244,22 @@ def merge_states(states: Sequence, merge_fn):
     ``fleet`` data plane), so they all share one seed-agreement contract:
     shards whose uint32 seed leaves concretely disagree raise a
     descriptive ValueError instead of silently merging garbage.
+
+    ``codec`` applies ONE wire crossing per shard state before merging (see
+    ``tree_merge``).  Callers whose states already crossed the wire encoded
+    -- e.g. the fleet coordinator, which restores codec'd checkpoints --
+    must NOT pass a codec here, or the states would be quantized twice.
     """
     states = list(states)
     if not states:
         raise ValueError("merge_states of no states")
     if len(states) == 1:
+        states = [_codecs.get_codec(codec).roundtrip(states[0])]
         _check_shard_seeds(states)  # degenerate fleet: still validated
         return states[0]
     if len(states) & (len(states) - 1) == 0:  # power of two: butterfly
-        return butterfly_allmerge(states, None, merge_fn)
-    return tree_merge(states, merge_fn)
+        return butterfly_allmerge(states, None, merge_fn, codec=codec)
+    return tree_merge(states, merge_fn, codec=codec)
 
 
 def _check_partner_seeds(a, b, round_idx: int) -> None:
@@ -268,7 +282,8 @@ def _check_partner_seeds(a, b, round_idx: int) -> None:
                 f"tree_merge)")
 
 
-def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None):
+def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None,
+                       codec=None):
     """O(log D) all-merge for any composable state.
 
     Two forms:
@@ -286,12 +301,18 @@ def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None):
     shards whose uint32 seed leaves concretely disagree raises a
     descriptive ValueError (tracer seeds inside jit/shard_map skip the
     check, mirroring ``worp.check_merge_seeds``).
+
+    ``codec`` (host form only): each shard state crosses the wire encoded
+    ONCE, before round 0 -- matching a broadcast of the encoded shard image;
+    later rounds merge already-decoded states locally.  The collective form
+    rejects lossy codecs (tracers cannot be byte-encoded in-collective).
     """
     merge_fn = _resolve_merge(merge_fn)
+    cdc = _codecs.get_codec(codec)
     # Host form = a plain list/tuple of shard states.  Sampler states are
     # NamedTuples (tuple subclasses), so match exact types only.
     if isinstance(state, list) or type(state) is tuple:
-        states = list(state)
+        states = [cdc.roundtrip(s) for s in state]
         d = len(states)
         if d == 0:
             raise ValueError("butterfly_allmerge of no states")
@@ -306,6 +327,11 @@ def butterfly_allmerge(state, axis_name: str, merge_fn, axis_size=None):
             states = [merge_fn(states[i], states[i ^ dist])
                       for i in range(d)]
         return states[0]
+    if cdc.rel_step != 0.0:
+        raise ValueError(
+            f"butterfly_allmerge collective form cannot apply lossy codec "
+            f"{cdc.name!r} to tracers; use gradcomp's fake-quant boundaries "
+            f"or the host form")
     if axis_size is None:
         mesh = _CTX.mesh
         assert mesh is not None, "butterfly_allmerge needs axis_size or mesh"

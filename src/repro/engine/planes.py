@@ -76,6 +76,7 @@ from repro.core import countsketch, hashing, tv_sampler, worp
 from repro.core import sampler as core_sampler
 from repro.core import transforms
 from repro.core.sampler import SamplerSpec
+from repro.distributed import codecs as wire_codecs
 from repro.engine.engine import _refresh_candidates, batched_ops
 from repro.kernels import ops
 
@@ -331,9 +332,15 @@ class DataPlane:
     def __init__(self, spec: SamplerSpec, state,
                  policy: Optional[FlushPolicy] = None,
                  interpret: Optional[bool] = None,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 codec: str = "none"):
         self.spec = spec
         self.policy = policy if policy is not None else FlushPolicy()
+        # the wire codec this plane's state crosses boundaries under.  It
+        # also drives byte accounting: ``FlushPolicy.max_bytes`` budgets
+        # what would actually go on the wire (encoded payload size), not
+        # raw fp32 bytes -- with codec ``none`` the two are identical.
+        self.codec = wire_codecs.get_codec(codec)
         self._state = state
         self._interpret = interpret
         self._use_kernel = use_kernel
@@ -357,7 +364,8 @@ class DataPlane:
         self._buf_keys.append(keys)
         self._buf_vals.append(values)
         self._buf_elems += keys.shape[1]
-        self._buf_bytes += keys.nbytes + values.nbytes
+        self._buf_bytes += (self.codec.payload_nbytes(keys)
+                            + self.codec.payload_nbytes(values))
         if self._buf_t0 is None:
             self._buf_t0 = time.monotonic()
         if self.policy.should_flush(self._buf_elems, self._buf_bytes,
@@ -518,9 +526,9 @@ class AsyncPlane(SparsePlane):
     _QUEUE_DEPTH = 1  # + the batch the worker holds = double buffering
 
     def __init__(self, spec, state, policy=None, interpret=None,
-                 use_kernel=None):
+                 use_kernel=None, codec: str = "none"):
         super().__init__(spec, state, policy=policy, interpret=interpret,
-                         use_kernel=use_kernel)
+                         use_kernel=use_kernel, codec=codec)
         self._jobs: queue.Queue = queue.Queue(maxsize=self._QUEUE_DEPTH)
         self._lock = threading.Lock()
         self._error: Optional[BaseException] = None
@@ -674,7 +682,8 @@ class AsyncPlane(SparsePlane):
                 self._buf_keys.insert(0, keys)
                 self._buf_vals.insert(0, vals)
                 self._buf_elems += keys.shape[1]
-                self._buf_bytes += keys.nbytes + vals.nbytes
+                self._buf_bytes += (self.codec.payload_nbytes(keys)
+                                    + self.codec.payload_nbytes(vals))
             if self._buf_t0 is None and self._buf_keys:
                 self._buf_t0 = time.monotonic()
             pending = self._buf_elems
@@ -786,9 +795,10 @@ class PipelinePlane(DataPlane):
     """
 
     def __init__(self, spec, state, policy=None, interpret=None,
-                 use_kernel=None, shards: int = 2, subplane: str = "sparse"):
+                 use_kernel=None, shards: int = 2, subplane: str = "sparse",
+                 codec: str = "none"):
         super().__init__(spec, state, policy=policy, interpret=interpret,
-                         use_kernel=use_kernel)
+                         use_kernel=use_kernel, codec=codec)
         if shards < 1:
             raise ValueError(f"pipeline plane needs shards >= 1, got {shards}")
         if subplane == "pipeline":
@@ -798,7 +808,10 @@ class PipelinePlane(DataPlane):
         self._initial = state    # merge-neutral reset state for set_state
         self._ops = batched_ops(spec)
         # sub-planes flush every forwarded batch: dispatch granularity is
-        # decided HERE (the outer FlushPolicy / the feeder's block size)
+        # decided HERE (the outer FlushPolicy / the feeder's block size).
+        # They run in-process under codec "none": the wire boundary this
+        # plane models is the COLLAPSE (each shard state crosses once,
+        # encoded, before the merge -- see ``state``).
         self._subplanes = [
             make_plane(subplane, spec, state,
                        policy=FlushPolicy(max_elems=1),
@@ -836,9 +849,12 @@ class PipelinePlane(DataPlane):
         """The collapsed (merged-across-shards) settled state."""
         self._settle()
         if self._merged is None:
-            merged = self._subplanes[0].state
+            # each shard state crosses the wire ONCE (encoded + decoded)
+            # before merging; codec "none" is a copy-free identity
+            merged = self.codec.roundtrip(self._subplanes[0].state)
             for sub in self._subplanes[1:]:
-                merged = self._ops.merge(merged, sub.state)
+                merged = self._ops.merge(merged,
+                                         self.codec.roundtrip(sub.state))
             self._merged = merged
         return self._merged
 

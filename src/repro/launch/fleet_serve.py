@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import sampler as core_sampler
 from repro.data.pipeline import TurnstileZipfStream
+from repro.distributed import codecs as wire_codecs
 from repro.distributed import fleet as F
 from repro.engine import EngineConfig
 
@@ -85,7 +86,14 @@ def main():
     ap.add_argument("--ack-timeout", type=float, default=10.0)
     ap.add_argument("--verify", action="store_true",
                     help="assert bitwise parity of the aggregated sample "
-                         "against the single-process fleet plane")
+                         "against the single-process fleet plane (holds "
+                         "at every codec: the reference plane publishes "
+                         "through the same wire image)")
+    ap.add_argument("--codec", default="none",
+                    choices=wire_codecs.available_codecs(),
+                    help="wire codec replicas publish checkpoints through "
+                         "(seed/key leaves stay lossless; 'none' keeps "
+                         "the bitwise fp32 path)")
     args = ap.parse_args()
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
@@ -101,7 +109,8 @@ def main():
     fcfg = F.FleetConfig(engine=ecfg, replicas=args.replicas,
                          publish_every=args.publish_every,
                          ack_timeout=args.ack_timeout,
-                         ping_timeout=min(5.0, args.ack_timeout))
+                         ping_timeout=min(5.0, args.ack_timeout),
+                         codec=args.codec)
     faults = {}
     if args.kill_replica >= 0:
         faults[args.kill_replica] = F.FaultPlan(
@@ -131,13 +140,15 @@ def main():
         print(f"  req {b}: {' '.join(pairs)}")
 
     if args.verify:
-        ref = F.reference_sample(ecfg, batches, args.replicas, args.topk)
+        ref = F.reference_sample(ecfg, batches, args.replicas, args.topk,
+                                 codec=args.codec)
         ok = (np.array_equal(keys, np.asarray(ref.keys))
               and np.array_equal(freqs, np.asarray(ref.freqs)))
         if not ok:
             raise SystemExit("PARITY FAIL: fleet sample != single-process "
                              "fleet-plane reference")
-        print("parity=bitwise (vs single-process fleet plane)")
+        print(f"parity=bitwise (vs single-process fleet plane, "
+              f"codec={args.codec})")
 
     p50 = stats.latency_percentile(50) * 1e3
     p99 = stats.latency_percentile(99) * 1e3
@@ -145,7 +156,8 @@ def main():
           f"steps={args.steps},restarts={stats.restarts},"
           f"retries={stats.retries},probes={stats.probes},"
           f"startup_s={t_up:.1f},p50_ms={p50:.2f},p99_ms={p99:.2f},"
-          f"events_per_s={stats.routed_events / max(wall - t_up, 1e-9):.0f}")
+          f"events_per_s={stats.routed_events / max(wall - t_up, 1e-9):.0f},"
+          f"codec={args.codec},pub_bytes={stats.published_bytes}")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.configs.base import ARCH_NAMES, get_config
 from repro.core import sampler as core_sampler
+from repro.distributed import codecs as wire_codecs
 from repro.distributed import sharding as shd
 from repro.engine import EngineConfig, SketchEngine, available_planes
 from repro.models import model as M
@@ -67,13 +68,15 @@ def make_worker_engines(cfg: EngineConfig, workers: int, plane: str = "sparse",
             for _ in range(workers)]
 
 
-def aggregate_worker_states(workers: list):
+def aggregate_worker_states(workers: list, codec: str = "none"):
     """Drain every worker's data plane and reduce the shard states to the
     union state through the distributed merge layer: the host-form
     butterfly (hypercube XOR rounds) for power-of-two worker counts, the
     pairwise log-depth tree otherwise.  Stream-wise merging requires the
     shards to be mergeable -- identical configs, hence identical per-stream
-    seeds (validated leaf-wise by the merge trees as well)."""
+    seeds (validated leaf-wise by the merge trees as well).  ``codec``
+    names the wire codec each worker's state crosses to the aggregator
+    (``repro.distributed.codecs``; ``none`` keeps today's bitwise path)."""
     if not workers:
         raise ValueError("aggregate_worker_states of no workers")
     ref = workers[0].cfg
@@ -83,13 +86,13 @@ def aggregate_worker_states(workers: list):
                 f"worker {i} config differs from worker 0; shards must "
                 f"share an EngineConfig to be mergeable")
     states = [w.flush().state for w in workers]
-    return shd.merge_states(states, workers[0].ops.merge)
+    return shd.merge_states(states, workers[0].ops.merge, codec=codec)
 
 
-def sample_aggregated(workers: list, k: int):
+def sample_aggregated(workers: list, k: int, codec: str = "none"):
     """Per-request WOR samples over the UNION of all workers' ingested
     traffic (equals a single worker that saw the whole stream)."""
-    merged = aggregate_worker_states(workers)
+    merged = aggregate_worker_states(workers, codec=codec)
     return workers[0].sample_state(merged, k)
 
 
@@ -129,6 +132,12 @@ def main():
                          "ingestion pipeline's 'pipeline' plane (per-key "
                          "hash partition across S sub-planes, collapsed "
                          "through the sampler merge at sampling time)")
+    ap.add_argument("--codec", default="none",
+                    choices=wire_codecs.available_codecs(),
+                    help="wire codec for analytics state crossings: the "
+                         "worker->aggregator merge and (with --producers) "
+                         "the pipeline collapse encode through it; 'none' "
+                         "keeps the bitwise fp32 path")
     args = ap.parse_args()
     if args.worp_topk < 0:
         ap.error("--worp-topk must be >= 0")
@@ -187,7 +196,8 @@ def main():
         plane, plane_opts = args.plane, None
         if args.producers > 1:
             plane = "pipeline"
-            plane_opts = {"shards": args.producers, "subplane": args.plane}
+            plane_opts = {"shards": args.producers, "subplane": args.plane,
+                          "codec": args.codec}
         engines = make_worker_engines(ecfg, args.workers, plane=plane,
                                       plane_opts=plane_opts)
 
@@ -225,7 +235,8 @@ def main():
     if engines:
         # flushes every worker's pending ingests, merges the shard states
         # (butterfly/tree), then samples the aggregated per-request streams
-        sample = sample_aggregated(engines, args.worp_topk)
+        sample = sample_aggregated(engines, args.worp_topk,
+                                   codec=args.codec)
         keys, freqs = np.asarray(sample.keys), np.asarray(sample.freqs)
         scope = (f"last {args.worp_window} decode steps" if args.worp_window
                  else "prompt + decode")

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.core import countsketch, estimators, transforms, worp
+from repro.distributed import codecs as wire_codecs
 from repro.kernels import ops as kernel_ops
 
 _NEG = jnp.float32(-jnp.inf)
@@ -47,6 +48,24 @@ class CompressorConfig(NamedTuple):
     mode: str = "twopass"     # 'onepass' | 'twopass'
     estimator: str = "raw"    # 'raw' (EF-SGD) | 'ht' (unbiased, Eq. 1)
     seed: int = 0x5EED
+    # wire codec (repro.distributed.codecs) applied to every FLOAT payload
+    # crossing a collective boundary -- the sketch table and the pass-II
+    # value psums.  Inside jit the codec runs as fake quantization
+    # (quantize-dequantize on the same grid as the host byte codec);
+    # candidate ids are int32 and always travel raw (dtype guard).
+    codec: str = "none"
+
+
+def _comm_bytes(cc: CompressorConfig, float_payloads: Sequence,
+                id_count: int) -> float:
+    """Static bytes-on-wire per worker per step under ``cc.codec``:
+    ``float_payloads`` is ``[(num_elems, scale_slices), ...]`` for the
+    float collectives; ``id_count`` int32 ids travel raw."""
+    cdc = wire_codecs.get_codec(cc.codec)
+    total = 4 * id_count
+    for num, lead in float_payloads:
+        total += cdc.float_payload_nbytes(int(num), int(lead))
+    return float(total)
 
 
 def _dedup_ids(ids: jnp.ndarray, score: jnp.ndarray):
@@ -92,6 +111,8 @@ def compress_step(a_local: jnp.ndarray, cc: CompressorConfig,
     Returns (sparse_update (n,), new_error (n,), stats dict)."""
     n = a_local.shape[0]
     table, cand = compress_locally(a_local, cc)
+    # the local table crosses the wire encoded: same grid as the host codec
+    table = wire_codecs.fake_quant(table, cc.codec)
     table = jax.lax.psum(table, axis_names)                    # merge sketches
     cand_all = jax.lax.all_gather(cand, axis_names, tiled=True)  # union
     ids, est_vals, tau = decode_sample(table, cand_all, cc)
@@ -99,7 +120,8 @@ def compress_step(a_local: jnp.ndarray, cc: CompressorConfig,
     nworkers = jax.lax.psum(jnp.float32(1.0), axis_names)
     if cc.mode == "twopass":
         # pass II: exact values of the k sampled coordinates (k floats).
-        exact_local = a_local.astype(jnp.float32)[ids]
+        exact_local = wire_codecs.fake_quant(
+            a_local.astype(jnp.float32)[ids], cc.codec)
         vals = jax.lax.psum(exact_local, axis_names) / nworkers
     else:
         vals = est_vals / nworkers  # estimates approximate the SUM
@@ -113,11 +135,16 @@ def compress_step(a_local: jnp.ndarray, cc: CompressorConfig,
 
     sparse = jnp.zeros((n,), jnp.float32).at[ids].set(vals)
     new_err = a_local.astype(jnp.float32).at[ids].set(0.0)
+    two = cc.mode == "twopass"
     stats = {
         "comm_floats": jnp.float32(cc.rows * cc.width
-                                   + (2 * cc.k if cc.mode == "twopass"
-                                      else 0)),
+                                   + (2 * cc.k if two else 0)),
         "dense_floats": jnp.float32(n),
+        "comm_bytes": jnp.float32(_comm_bytes(
+            cc, [(cc.rows * cc.width, cc.rows)] + ([(cc.k, 1)] if two
+                                                   else []),
+            id_count=cc.candidates)),
+        "dense_bytes": jnp.float32(4 * n),
         "tau": tau,
     }
     return sparse, new_err, stats
@@ -186,6 +213,7 @@ def tree_compress_step_sharded(grads, error, cc: CompressorConfig,
         cand_ids.append(ci.astype(jnp.int32))
         cand_tags.append(jnp.full((ncand,), li, jnp.int32))
 
+    table = wire_codecs.fake_quant(table, cc.codec)  # encoded wire crossing
     table = jax.lax.psum(table, axis_names)
     cand_id = jax.lax.all_gather(jnp.concatenate(cand_ids), axis_names,
                                  tiled=True)
@@ -226,7 +254,8 @@ def tree_compress_step_sharded(grads, error, cc: CompressorConfig,
             hit = (sel_tag == li) & (sel_id < size)
             safe = jnp.clip(sel_id, 0, size - 1)
             vals = vals + jnp.where(hit, a[safe], 0.0)
-        vals = jax.lax.psum(vals, axis_names) / nworkers
+        vals = jax.lax.psum(wire_codecs.fake_quant(vals, cc.codec),
+                            axis_names) / nworkers
     else:
         vals = est_vals / nworkers  # estimates approximate the SUM
 
@@ -240,9 +269,16 @@ def tree_compress_step_sharded(grads, error, cc: CompressorConfig,
         err_leaves.append(jnp.where(sp != 0.0, 0.0, a).reshape(g.shape))
 
     treedef = jax.tree_util.tree_structure(grads)
+    two = cc.mode == "twopass"
+    ncand_total = sum(min(cand_per_leaf, s) for s in sizes)
     stats = {"comm_floats": jnp.float32(
-        cc.rows * cc.width + (2 * cc.k if cc.mode == "twopass" else 0)),
-        "dense_floats": jnp.float32(sum(sizes))}
+        cc.rows * cc.width + (2 * cc.k if two else 0)),
+        "dense_floats": jnp.float32(sum(sizes)),
+        "comm_bytes": jnp.float32(_comm_bytes(
+            cc, [(cc.rows * cc.width, cc.rows)] + ([(cc.k, 1)] if two
+                                                   else []),
+            id_count=2 * ncand_total)),  # (tag, id) pairs
+        "dense_bytes": jnp.float32(4 * sum(sizes))}
     return (jax.tree_util.tree_unflatten(treedef, sparse_leaves),
             jax.tree_util.tree_unflatten(treedef, err_leaves), stats)
 
@@ -292,6 +328,9 @@ def tree_compress_step_engine(grads, error, cc: CompressorConfig,
     tables = kernel_ops.sketch_dense_batch(
         a_pad, cc.rows, cc.width, sk_seeds, p=cc.p, scheme=cc.scheme,
         transform_seeds=t_seeds, lengths=lengths)               # (L, R, W)
+    # per-layer scale slices (leading axis L): one layer's magnitude never
+    # degrades another's quantization grid
+    tables = wire_codecs.fake_quant(tables, cc.codec)
     tables = jax.lax.psum(tables, axis_names)                   # merge shards
 
     # 2. per-layer candidate proposals, unioned across workers.  ncand is
@@ -333,8 +372,10 @@ def tree_compress_step_engine(grads, error, cc: CompressorConfig,
     if cc.mode == "twopass":
         exact_local = jnp.take_along_axis(
             a_pad, jnp.where(live, sel, 0), axis=1)            # (L, k)
-        vals = jax.lax.psum(jnp.where(live, exact_local, 0.0),
-                            axis_names) / nworkers
+        vals = jax.lax.psum(
+            wire_codecs.fake_quant(jnp.where(live, exact_local, 0.0),
+                                   cc.codec),
+            axis_names) / nworkers
     else:
         vals = jnp.where(live, est_vals, 0.0) / nworkers
 
@@ -351,11 +392,16 @@ def tree_compress_step_engine(grads, error, cc: CompressorConfig,
         err_leaves.append(jnp.where(sp != 0.0, 0.0, a).reshape(g.shape))
 
     treedef = jax.tree_util.tree_structure(grads)
+    two = cc.mode == "twopass"
     stats = {
         "comm_floats": jnp.float32(
-            L * cc.rows * cc.width
-            + (2 * L * k_leaf if cc.mode == "twopass" else 0)),
+            L * cc.rows * cc.width + (2 * L * k_leaf if two else 0)),
         "dense_floats": jnp.float32(sum(sizes)),
+        "comm_bytes": jnp.float32(_comm_bytes(
+            cc, [(L * cc.rows * cc.width, L)] + ([(L * k_leaf, L)] if two
+                                                 else []),
+            id_count=L * ncand)),
+        "dense_bytes": jnp.float32(4 * sum(sizes)),
         "tau": tau,
     }
     return (jax.tree_util.tree_unflatten(treedef, sparse_leaves),

@@ -11,6 +11,14 @@ the target NamedSharding), so a job checkpointed on N hosts restarts on M
 hosts unchanged -- the elastic-scaling contract (DESIGN.md Sec. 6).  CRC32s
 catch torn/corrupt writes; the newest COMMITTED step wins; .tmp residue from
 a crash is ignored and garbage-collected.
+
+Wire codecs (``repro.distributed.codecs``): ``save(..., codec=...)`` stores
+each leaf's ENCODED payload (fp16/q8 wire image for float leaves; raw bytes
+for seed/key/integer leaves and for codec ``none``), with the CRC32 computed
+over the encoded bytes -- so corrupt-shard rejection fires on exactly what
+crossed the wire.  The manifest records the codec kind + scales per lossy
+leaf; ``restore`` decodes from the manifest alone and needs no codec handle.
+``codec="none"`` writes byte-identical files to the pre-codec format.
 """
 from __future__ import annotations
 
@@ -23,16 +31,23 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.distributed import codecs as _codecs
+
 
 def _leaf_key(path) -> str:
     return jax.tree_util.keystr(path).replace("'", "").replace("[", ".").replace(
         "]", "").strip(".").replace("/", "_") or "root"
 
 
-def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None
-         ) -> str:
-    """Write a checkpoint; returns the committed path."""
+def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None,
+         codec=None) -> str:
+    """Write a checkpoint; returns the committed path.
+
+    ``codec``: a ``repro.distributed.codecs`` name/instance.  Float leaves
+    are stored as the codec's wire image (CRC over the ENCODED bytes);
+    integer/seed/key leaves always stay raw (dtype guard)."""
     os.makedirs(directory, exist_ok=True)
+    cdc = _codecs.get_codec(codec)
     name = f"step_{step:09d}"
     tmp = os.path.join(directory, name + ".tmp")
     final = os.path.join(directory, name)
@@ -49,12 +64,18 @@ def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None
         # raw-byte storage: np.save writes ml_dtypes (bfloat16) as opaque
         # void fields that cannot be cast back; bytes + manifest dtype are
         # portable across numpy versions
-        np.save(fn, np.frombuffer(arr.tobytes(), np.uint8))
-        manifest["leaves"][key] = {
-            "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
-            "crc32": zlib.crc32(arr.tobytes()),
+        enc = cdc.encode_leaf(arr)
+        np.save(fn, enc.payload)
+        meta = {
+            "shape": list(enc.shape),
+            "dtype": enc.dtype,
+            "crc32": zlib.crc32(enc.payload.tobytes()),
         }
+        if enc.kind != "raw":
+            meta["codec"] = {"kind": enc.kind,
+                             "scale": [float(s) for s in enc.scale]
+                             if enc.scale is not None else None}
+        manifest["leaves"][key] = meta
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -105,7 +126,16 @@ def restore(directory: str, step: int, like: Any, shardings: Any = None
         raw = np.load(os.path.join(final, key + ".npy"))
         if zlib.crc32(raw.tobytes()) != meta["crc32"]:
             raise IOError(f"checkpoint leaf {key} failed CRC validation")
-        arr = raw.view(_resolve_dtype(meta["dtype"])).reshape(meta["shape"])
+        cmeta = meta.get("codec")
+        if cmeta is not None:  # lossy wire image: decode via the manifest
+            scale = (None if cmeta["scale"] is None
+                     else np.asarray(cmeta["scale"], np.float32))
+            arr = _codecs.decode_leaf(_codecs.EncodedLeaf(
+                cmeta["kind"], raw, meta["dtype"], tuple(meta["shape"]),
+                scale))
+        else:
+            arr = raw.view(
+                _resolve_dtype(meta["dtype"])).reshape(meta["shape"])
         if list(arr.shape) != list(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")
@@ -130,3 +160,23 @@ def restore_latest(directory: str, like: Any, shardings: Any = None):
     if step is None:
         return None, None
     return restore(directory, step, like, shardings), step
+
+
+def payload_nbytes(committed_path: str) -> int:
+    """Wire bytes of a committed checkpoint: encoded payload + stored scales
+    per leaf, computed from the manifest alone (no leaf loads).  This is the
+    number the fleet publish protocol and the comm-volume benchmarks report
+    as bytes-per-checkpoint."""
+    with open(os.path.join(committed_path, "manifest.json")) as f:
+        manifest = json.load(f)
+    total = 0
+    for meta in manifest["leaves"].values():
+        size = int(np.prod(meta["shape"], dtype=np.int64))
+        cmeta = meta.get("codec")
+        if cmeta is None:
+            total += size * _resolve_dtype(meta["dtype"]).itemsize
+        elif cmeta["kind"] == "fp16":
+            total += 2 * size
+        else:  # q8/q2: int8 payload + fp32 scales
+            total += size + 4 * len(cmeta["scale"] or ())
+    return total

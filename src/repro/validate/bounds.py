@@ -190,3 +190,129 @@ def fp32_nrmse_floor(k: int) -> float:
     """NRMSE floor from float32 accumulation over a k-term HT sum: golden
     values below sqrt(k) * 2^-24 are unreachable in fp32 arithmetic."""
     return math.sqrt(k) * 2.0 ** -24
+
+
+# ---------------------------------------------------------------------------
+# wire-codec quantization: derived allowances for lossy comm boundaries
+# ---------------------------------------------------------------------------
+# A codec (repro.distributed.codecs) perturbs each decoded float element
+# two ways: a SYMMETRIC grid-rounding error of at most ``rel_step * m``
+# (m = the element's scale-slice max-abs), and -- for clamped codecs
+# (fp16) -- a ONE-SIDED saturation error of max(|v| - clamp, 0) on the
+# element's OWN magnitude.  Everything below derives acceptance widenings
+# from those two per-codec constants -- never from observed errors.  The
+# split matters: symmetric rounding decorrelates across the randomization
+# ensemble (near-zero mean, absorbed by the observed-std CLT radius),
+# while saturation and inclusion flips do NOT cancel and need explicit
+# bias allowances.  (The naive per-trial worst case sum_sel r_x * step_t
+# is avoided on purpose: step_t tracks the ensemble max |nu*|, a
+# Pareto(1)-tailed statistic whose trial mean diverges, so any allowance
+# built on it saturates the admissibility gate without describing the
+# actual estimator error.)
+
+def quantization_step(slice_max, rel_step: float):
+    """Symmetric grid-rounding half-width for a slice with max-abs
+    ``slice_max``: rel_step * m.  Vectorized over ``slice_max``."""
+    return rel_step * np.asarray(slice_max, np.float64)
+
+
+def _clamp_excess(mag, clamp):
+    """One-sided saturation error of each element past a finite clamp."""
+    mag = np.asarray(mag, np.float64)
+    if clamp is None:
+        return np.zeros_like(mag)
+    return np.maximum(mag - clamp, 0.0)
+
+
+def quantization_flip_allowance(tstar, thresholds, rel_step: float,
+                                shards: int = 2, clamp=None):
+    """Per-key allowance on inclusion-frequency shift from a quantized
+    merge, (n,) mean over trials.
+
+    Each of the ``shards`` decoded shard states perturbs a merged
+    transformed magnitude by at most ``shards * step_t`` grid error
+    (step_t from the per-trial ensemble max m_t = max_x |nu*_x|, the proxy
+    for the wire payload's scale-slice max) plus the element's own
+    saturation excess.  Both the key's estimate AND the bottom-k threshold
+    move within that budget, so inclusion can only flip when the exact gap
+    ||nu*_x| - tau| is within the summed perturbation ``pert``.  Grid
+    errors are equidistributed within their half-width across the
+    randomization ensemble (nu* varies continuously trial to trial), so
+    per trial the flip probability is bounded by the uniform tail
+    max(0, 1 - gap/pert), not the adversarial 0/1 indicator (a sum of
+    independent symmetric uniforms is more concentrated than one uniform
+    over the summed support, so the single-uniform tail upper-bounds it).
+    The trial mean of that tail bounds the per-key inclusion-frequency
+    shift -- the allowance added to the binomial tolerance for codec-axis
+    conformance cells.  For the 2-bit control codec pert = 2 * m_t exceeds
+    every gap by at least 2x, so each term is > 1/2 and the mean saturates
+    past the admissibility gate deterministically.
+    """
+    tstar = np.asarray(tstar, np.float64)
+    thresholds = np.asarray(thresholds, np.float64)
+    mag = np.abs(tstar)
+    m = np.max(mag, axis=1, keepdims=True)                     # (T, 1)
+    step = shards * quantization_step(m, rel_step)             # (T, 1)
+    pert = (2.0 * step + shards * _clamp_excess(mag, clamp)
+            + shards * _clamp_excess(thresholds[:, None], clamp))
+    gap = np.abs(mag - thresholds[:, None])                    # (T, n)
+    tail = np.clip(1.0 - gap / np.maximum(pert, 1e-300), 0.0, 1.0)
+    return tail.mean(axis=0)                                   # (n,)
+
+
+def quantization_ht_allowance(freqs, tstar, thresholds, rel_step: float,
+                              shards: int = 2, clamp=None,
+                              power: float = 1.0) -> float:
+    """Systematic (non-cancelling) HT-moment bias bound for a quantized
+    merge: clamp saturation + inclusion-flip leakage.
+
+    Symmetric grid rounding contributes (near-)zero MEAN error -- it
+    decorrelates across the randomization ensemble and is absorbed by the
+    CLT radius on the observed estimator std -- so the bias allowance only
+    carries the two one-sided mechanisms:
+
+    * saturation: a selected key clipped at the clamp loses up to
+      shards * max(|nu*_x| - clamp, 0) of transformed magnitude; the
+      Eq.-(6) inversion r_x = nu_x / |nu*_x| maps that to a frequency
+      shift d_nu_x, and a ``power``-moment term moves by (first order)
+      power * nu_x^{power-1} * d_nu_x; summed over the trial's selected
+      set and averaged over trials.
+    * flip leakage: a key whose inclusion flips moves the HT sum by its
+      whole per-key term, ~ nu_x^power / pi_x (pi_x the ensemble
+      inclusion frequency); weighted by the per-key flip allowance.
+    """
+    tstar = np.asarray(tstar, np.float64)
+    thresholds = np.asarray(thresholds, np.float64)
+    freqs = np.abs(np.asarray(freqs, np.float64))
+    mag = np.abs(tstar)
+    sel = mag >= thresholds[:, None]
+    d_nu = (freqs[None, :] / np.maximum(mag, 1e-30)
+            * shards * _clamp_excess(mag, clamp))
+    clamp_bias = float(np.mean(np.sum(
+        sel * power * freqs[None, :] ** (power - 1.0) * d_nu, axis=1)))
+    flip = quantization_flip_allowance(tstar, thresholds, rel_step,
+                                       shards=shards, clamp=clamp)
+    pi = np.maximum(sel.mean(axis=0), 1.0 / tstar.shape[0])
+    flip_bias = float(np.sum(flip * freqs ** power / pi))
+    return clamp_bias + flip_bias
+
+
+def quantization_nrmse_allowance(rel_step: float, k: int,
+                                 shards: int = 2) -> float:
+    """NRMSE widening for a k-term HT sum whose terms each carry up to
+    ``shards * rel_step`` relative wire error: sqrt(k) * shards * rel_step,
+    the quantization analogue of ``fp32_nrmse_floor`` (composed additively
+    with it and the chi2 factors by the golden-value checks)."""
+    return math.sqrt(k) * shards * rel_step
+
+
+def codec_admissible(mean_flip_allowance: float,
+                     rel_bias_allowance: float) -> bool:
+    """Structural vacuity gate for codec-axis cells: a codec whose derived
+    mean flip allowance covers >= 0.5 (half the probability range) or whose
+    relative bias allowance reaches 1.0 (100% of the truth) widens the
+    tolerances past the point where a pass certifies anything -- the
+    harness must reject such a codec rather than rubber-stamp it.  The two
+    limits are the saturation points of the quantities themselves, not
+    tuned constants."""
+    return mean_flip_allowance < 0.5 and rel_bias_allowance < 1.0

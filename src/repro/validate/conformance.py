@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core import transforms
 from repro.core.sampler import SamplerSpec, available
+from repro.distributed import codecs as wire_codecs
 
 from . import bounds, empirics
 from .report import FAIL, PASS, SKIP, CheckResult, build
@@ -58,6 +59,13 @@ ESTIMATED = ("onepass", "twopass", "tv")
 
 SCHEMES = (transforms.PPSWOR, transforms.PRIORITY)
 PS = (0.5, 1.0, 1.5, 2.0)
+
+# Codec-axis cells run on the sharded planes, whose merge boundary is the
+# wire the codec actually crosses; both default to 2 shards/replicas
+# (planes.PipelinePlane / fleet.FleetPlane), which sets the ``shards``
+# factor in the derived quantization allowances.
+CODEC_PLANES = ("pipeline", "fleet")
+CODEC_SHARDS = 2
 
 
 class ConformanceConfig(NamedTuple):
@@ -75,6 +83,7 @@ class ConformanceConfig(NamedTuple):
     chunks: int = 3           # stream is fed in this many element batches
     rows: int = 5             # sketch rows
     num_samplers: int = 8     # tv cascade length
+    codec: str = "none"       # wire codec the sharded planes merge through
 
 
 class CellData(NamedTuple):
@@ -103,7 +112,9 @@ _REF_CACHE: dict = {}
 
 
 def _reference(freqs, p: float, scheme: str, cfg: ConformanceConfig):
-    key = (scheme, p, cfg)
+    # the exact oracle never crosses a wire: codec variants of the same
+    # operating point share one reference ensemble
+    key = (scheme, p, cfg._replace(codec="none"))
     if key not in _REF_CACHE:
         _REF_CACHE[key] = empirics.perfect_trials(
             freqs, cfg.k, p, scheme, cfg.ref_trials, cfg.seed,
@@ -119,7 +130,7 @@ def prepare_cell(name: str, scheme: str, p: float, path: str,
     spec = spec if spec is not None else _spec(name, p, scheme, cfg)
     sample, state = empirics.run_trials(spec, freqs, cfg.k, cfg.trials,
                                         cfg.seed, path=path,
-                                        chunks=cfg.chunks)
+                                        chunks=cfg.chunks, codec=cfg.codec)
     ref_sample, tstar, thr = _reference(freqs, p, scheme, cfg)
     return CellData(freqs=freqs, spec=spec, sample=sample, state=state,
                     ref_sample=ref_sample, ref_tstar=tstar,
@@ -156,6 +167,13 @@ def check_inclusion_probabilities(name: str, scheme: str, p: float,
             data.ref_tstar, data.ref_thresholds,
             width=data.spec.cfg.width, rows=data.spec.cfg.rows)
         tol = tol + flip
+    qflip = np.zeros(cfg.n)
+    cdc = wire_codecs.get_codec(cfg.codec)
+    if cdc.rel_step != 0.0:  # lossy wire: derived quantization widening
+        qflip = bounds.quantization_flip_allowance(
+            data.ref_tstar, data.ref_thresholds, cdc.rel_step,
+            shards=CODEC_SHARDS, clamp=cdc.clamp)
+        tol = tol + qflip
     dev = np.abs(emp - ref)
     worst = int(np.argmax(dev - tol))
     margin = float((dev - tol)[worst])
@@ -167,6 +185,7 @@ def check_inclusion_probabilities(name: str, scheme: str, p: float,
          "worst_tol": float(tol[worst]),
          "mean_abs_dev": float(dev.mean()),
          "mean_flip_allowance": float(np.mean(flip)),
+         "mean_quant_flip_allowance": float(np.mean(qflip)),
          "trials": cfg.trials, "ref_trials": cfg.ref_trials})
 
 
@@ -180,6 +199,7 @@ def check_ht_unbiased(name: str, scheme: str, p: float, path: str,
                            {"reason": "no bottom-k threshold (HT undefined)"})
     data = _data(name, scheme, p, path, cfg, spec, data)
     powers = (1.0, 2.0)
+    cdc = wire_codecs.get_codec(cfg.codec)
     details, margin = {}, -np.inf
     for power in powers:
         est = empirics.ht_estimates(
@@ -191,10 +211,18 @@ def check_ht_unbiased(name: str, scheme: str, p: float, path: str,
         if name in ESTIMATED:
             allowance = bounds.sketch_bias_allowance(
                 truth, cfg.k, data.spec.cfg.width)
+        qallow = 0.0
+        if cdc.rel_step != 0.0:  # lossy wire: derived quantization bias
+            qallow = bounds.quantization_ht_allowance(
+                data.freqs, data.ref_tstar, data.ref_thresholds,
+                cdc.rel_step, shards=CODEC_SHARDS, clamp=cdc.clamp,
+                power=power)
+            allowance = allowance + qallow
         m = abs(float(est.mean()) - truth) - radius - allowance
         details[f"pow{power:g}"] = {
             "mean": float(est.mean()), "truth": truth,
             "clt_radius": radius, "bias_allowance": allowance,
+            "quant_allowance": qallow,
             "rel_err": abs(float(est.mean()) - truth) / truth}
         margin = max(margin, m / truth)  # relative, comparable across powers
     details["worst_margin"] = float(margin)
@@ -379,6 +407,49 @@ def check_tv_single_draw(name: str, scheme: str, p: float, path: str,
          "trials": cfg.trials})
 
 
+def check_codec_admissible(name: str, scheme: str, p: float, path: str,
+                           cfg: ConformanceConfig,
+                           spec: Optional[SamplerSpec] = None,
+                           data: Optional[CellData] = None) -> CheckResult:
+    """The codec's derived tolerance widenings leave the cell falsifiable.
+
+    A lossy codec PASSES its distributional checks only inside WIDENED
+    tolerances (``bounds.quantization_*_allowance``), so a coarse-enough
+    codec could trivially 'pass' by widening the tolerances past the
+    quantities' own ranges.  This gate computes the widenings from the
+    reference ensemble alone and FAILS any codec whose mean inclusion-flip
+    allowance covers >= 0.5 (half the probability range) or whose relative
+    HT-bias allowance reaches 1.0 (100% of the truth) --
+    ``bounds.codec_admissible``.  Needs no sampler trials, so it also
+    powers the cheap q2 negative control.
+    """
+    cdc = wire_codecs.get_codec(cfg.codec)
+    if cdc.rel_step == 0.0:
+        return CheckResult("codec_admissible", name, scheme, p, path, SKIP,
+                           {"reason": "lossless codec: no widening"})
+    if data is not None:
+        freqs, tstar, thr = data.freqs, data.ref_tstar, data.ref_thresholds
+    else:
+        freqs = empirics.zipf_freqs(cfg.n, cfg.alpha, seed=cfg.seed & 0xFF)
+        _, tstar, thr = _reference(freqs, p, scheme, cfg)
+    flip = bounds.quantization_flip_allowance(
+        tstar, thr, cdc.rel_step, shards=CODEC_SHARDS, clamp=cdc.clamp)
+    bias = bounds.quantization_ht_allowance(
+        freqs, tstar, thr, cdc.rel_step, shards=CODEC_SHARDS,
+        clamp=cdc.clamp)
+    rel_bias = bias / empirics.moment_truth(freqs, 1.0)
+    mean_flip = float(np.mean(flip))
+    ok = bounds.codec_admissible(mean_flip, rel_bias)
+    return CheckResult(
+        "codec_admissible", name, scheme, p, path,
+        PASS if ok else FAIL,
+        {"codec": cdc.name, "rel_step": cdc.rel_step,
+         "shards": CODEC_SHARDS,
+         "mean_flip_allowance": mean_flip,
+         "rel_bias_allowance": float(rel_bias),
+         "worst_margin": float(max(mean_flip - 0.5, rel_bias - 1.0))})
+
+
 # Assumed trial count behind the paper's reported Table 3 numbers (the
 # benchmark reproduction's default); sets the golden values' own
 # chi-square uncertainty in check_table3_nrmse.
@@ -393,17 +464,21 @@ def check_table3_nrmse(trials: int = 12, delta: float = 1e-3,
                        rows: Optional[Sequence] = None,
                        methods: Sequence[str] = _TABLE3_METHODS,
                        n: int = 10_000, k: int = 100,
-                       seed: int = 0x7AB3) -> list:
+                       seed: int = 0x7AB3, path: str = "dense",
+                       codec: str = "none") -> list:
     """Frequency-moment NRMSE vs the paper's Table 3 golden values.
 
     For each (p, alpha, power) row, measure NRMSE over ``trials`` fresh
     randomizations for perfect WOR ('wor'), one-pass WORp ('one') and
     two-pass WORp ('two'), and require
-        measured <= golden * F_meas / f_paper + fp32_floor
+        measured <= golden * F_meas / f_paper + floor
     where F_meas / f_paper are the chi-square factors bounding how far a
     ``trials``-run (resp. PAPER_RUNS-run) NRMSE estimate can sit from its
-    population value, and the floor is the float32 accumulation limit --
-    golden values below it (1e-10 rows) are not reachable in fp32.
+    population value, and the floor composes the float32 accumulation
+    limit -- golden values below it (1e-10 rows) are not reachable in
+    fp32 -- with the wire-quantization allowance when ``codec`` is lossy
+    and the sampler trials run through a composable ``path`` whose
+    collapse crosses the codec (``bounds.quantization_nrmse_allowance``).
     Returns one CheckResult per (row, method).
     """
     from benchmarks.table3_nrmse import PAPER, ROWS  # golden values
@@ -411,7 +486,10 @@ def check_table3_nrmse(trials: int = 12, delta: float = 1e-3,
     d_each = delta / (len(rows) * len(methods))
     factor = (bounds.nrmse_upper_factor(trials, d_each)
               / bounds.nrmse_lower_factor(PAPER_RUNS, d_each))
-    floor = bounds.fp32_nrmse_floor(k)
+    cdc = wire_codecs.get_codec(codec)
+    floor = (bounds.fp32_nrmse_floor(k)
+             + bounds.quantization_nrmse_allowance(cdc.rel_step, k,
+                                                   shards=CODEC_SHARDS))
     results = []
     for (p, alpha, power) in rows:
         freqs = empirics.zipf_freqs(n, alpha, seed=int(alpha * 10))
@@ -426,20 +504,21 @@ def check_table3_nrmse(trials: int = 12, delta: float = 1e-3,
         if "one" in methods:
             spec = empirics.spec_for("onepass", n, k, p, transforms.PPSWOR)
             s, _ = empirics.run_trials(spec, freqs, k, trials, seed,
-                                       chunks=4)
+                                       path=path, chunks=4, codec=codec)
             measured["one"] = empirics.nrmse(
                 empirics.ht_estimates(s, p, f), truth)
         if "two" in methods:
             spec = empirics.spec_for("twopass", n, k, p, transforms.PPSWOR)
             s, _ = empirics.run_trials(spec, freqs, k, trials, seed,
-                                       chunks=4)
+                                       path=path, chunks=4, codec=codec)
             measured["two"] = empirics.nrmse(
                 empirics.ht_estimates(s, p, f), truth)
+        label = path if cdc.rel_step == 0.0 else f"{path}@{cdc.name}"
         for method, got in measured.items():
             golden = PAPER[(p, alpha, power)][method]
             tol = golden * factor + floor
             results.append(CheckResult(
-                "table3_nrmse", method, transforms.PPSWOR, p, "dense",
+                "table3_nrmse", method, transforms.PPSWOR, p, label,
                 PASS if got <= tol else FAIL,
                 {"row": [p, alpha, power], "measured": got,
                  "golden": golden, "tolerance": tol, "chi2_factor": factor,
@@ -456,6 +535,14 @@ CELL_CHECKS = (check_inclusion_probabilities, check_ht_unbiased,
                check_ht_ks, check_wor_distinct, check_wor_beats_wr,
                check_tv_single_draw)
 
+# Codec cells certify the ISSUE's contract -- inclusion probabilities and
+# HT-unbiasedness within DERIVED widened tolerances, WOR-ness untouched,
+# and the widenings themselves falsifiable (admissibility gate).  ht_ks is
+# excluded: its dense reference carries no codec noise, so pure DKW is not
+# the right tolerance there.
+CODEC_CELL_CHECKS = (check_inclusion_probabilities, check_ht_unbiased,
+                     check_wor_distinct, check_codec_admissible)
+
 
 def run_cell(name: str, scheme: str, p: float, path: str,
              cfg: ConformanceConfig) -> list:
@@ -466,16 +553,58 @@ def run_cell(name: str, scheme: str, p: float, path: str,
             for chk in CELL_CHECKS]
 
 
+def run_codec_cell(name: str, scheme: str, p: float, plane: str,
+                   codec: str, cfg: ConformanceConfig) -> list:
+    """One codec-axis cell: run the sampler's trials through ``plane``
+    (pipeline or fleet) with its merge boundary crossing ``codec``, then
+    apply the codec check set.  Results are labeled ``plane@codec`` so the
+    report and CI greps distinguish them from the lossless grid."""
+    ccfg = cfg._replace(codec=codec)
+    data = prepare_cell(name, scheme, p, plane, ccfg)
+    label = f"{plane}@{codec}"
+    return [chk(name, scheme, p, label, ccfg, data=data)
+            for chk in CODEC_CELL_CHECKS]
+
+
+def codec_negative_control(scheme: str, p: float,
+                           cfg: ConformanceConfig) -> CheckResult:
+    """The harness must REJECT a too-coarse codec, or the codec cells prove
+    nothing.  The 2-bit ``q2`` codec's rel_step (1/2) makes the derived
+    flip allowance saturate the whole probability range (2*shards*step_t
+    >= m_t >= every gap), so ``check_codec_admissible`` FAILS it
+    deterministically.  This control PASSes iff that rejection fired; the
+    raw q2 FAIL is folded in here rather than appended to the suite, so
+    ``failed=0`` remains the green criterion.
+    """
+    ctrl = check_codec_admissible("onepass", scheme, p, "fleet@q2",
+                                  cfg._replace(codec="q2"))
+    return CheckResult(
+        "codec_negative_control", "onepass", scheme, p, "fleet@q2",
+        PASS if ctrl.status == FAIL else FAIL,
+        {"control_check": "codec_admissible",
+         "control_status": ctrl.status,
+         "mean_flip_allowance": ctrl.details.get("mean_flip_allowance"),
+         "rel_bias_allowance": ctrl.details.get("rel_bias_allowance"),
+         "worst_margin": -float(ctrl.details.get("worst_margin", 1.0))})
+
+
 def run_suite(samplers: Optional[Sequence[str]] = None,
               schemes: Sequence[str] = SCHEMES,
               ps: Sequence[float] = (1.0,),
               paths: Sequence[str] = empirics.PATHS,
               cfg: ConformanceConfig = ConformanceConfig(),
-              table3_trials: int = 0) -> dict:
+              table3_trials: int = 0,
+              codecs: Sequence[str] = ()) -> dict:
     """Sweep the grid and build the JSON report.
 
     ``table3_trials > 0`` additionally runs the Table-3 golden-value check
     with that many randomizations (the expensive, n=10^4 rows).
+
+    ``codecs`` names lossy wire codecs to certify: for each one, a
+    ``plane@codec`` cell per sharded plane (``CODEC_PLANES``) runs the
+    one-pass sampler's trials through that plane's merge boundary under
+    the codec and applies ``CODEC_CELL_CHECKS``, plus ONE q2 negative
+    control proving the admissibility gate rejects a too-coarse codec.
     """
     samplers = list(samplers if samplers is not None else available())
     results = []
@@ -484,11 +613,17 @@ def run_suite(samplers: Optional[Sequence[str]] = None,
             for p in ps:
                 for path in paths:
                     results.extend(run_cell(name, scheme, p, path, cfg))
+    for codec in codecs:
+        for plane in CODEC_PLANES:
+            results.extend(run_codec_cell("onepass", schemes[0], ps[0],
+                                          plane, codec, cfg))
+    if codecs:
+        results.append(codec_negative_control(schemes[0], ps[0], cfg))
     if table3_trials:
         results.extend(check_table3_nrmse(trials=table3_trials,
                                           delta=cfg.delta))
     meta = {"suite": "repro.validate", "config": cfg._asdict(),
             "samplers": samplers, "schemes": list(schemes),
             "ps": list(ps), "paths": list(paths),
-            "table3_trials": table3_trials}
+            "codecs": list(codecs), "table3_trials": table3_trials}
     return build(results, meta)

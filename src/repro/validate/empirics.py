@@ -79,7 +79,7 @@ def spec_for(name: str, n: int, k: int, p: float, scheme: str,
 
 def run_trials(spec: SamplerSpec, freqs: np.ndarray, k: int, trials: int,
                seed: int, path: str = DENSE, chunks: int = 3,
-               offset: int = 0):
+               offset: int = 0, codec: str = "none"):
     """Run T independent trials of ``spec`` over ``freqs``; returns the
     batched Sample (leading (T,) axis on every leaf) and the final batched
     state.
@@ -94,6 +94,11 @@ def run_trials(spec: SamplerSpec, freqs: np.ndarray, k: int, trials: int,
     boundary (``FlushPolicy(max_elems=1)`` fires per ingest), so streaming
     accumulation is exercised with identical dispatch boundaries on every
     plane.
+
+    ``codec`` names a wire codec (``repro.distributed.codecs``) forwarded
+    to the plane: sharded planes (pipeline/fleet) cross their merge
+    boundary through it, so codec-axis conformance cells measure the REAL
+    lossy data path, not a simulation.
     """
     if path not in PATHS:
         raise ValueError(f"unknown trial path {path!r}; expected {PATHS}")
@@ -103,7 +108,8 @@ def run_trials(spec: SamplerSpec, freqs: np.ndarray, k: int, trials: int,
     sk_seeds, t_seeds = derive_trial_seeds(trials, seed, offset=offset)
     ops = eng.batched_ops(spec)
     plane = planes.make_plane(path, spec, ops.init(sk_seeds, t_seeds),
-                              policy=planes.FlushPolicy(max_elems=1))
+                              policy=planes.FlushPolicy(max_elems=1),
+                              codec=codec)
     step = -(-n // chunks)
     for lo in range(0, n, step):
         plane.ingest(keys[:, lo:lo + step], vals[:, lo:lo + step])

@@ -90,6 +90,30 @@ class TestFlushPolicy:
         assert eng.pending == 0
         assert not np.all(np.asarray(eng.state.sketch.table) == 0.0)
 
+    def test_byte_budget_accounts_encoded_payload(self):
+        """``FlushPolicy.max_bytes`` budgets WIRE bytes: under a lossy codec
+        the pending-byte counter tracks the encoded payload (fp16 halves the
+        float-value bytes here), so a budget that fires at raw fp32 size
+        keeps buffering when the plane publishes through the codec."""
+        cfg = _cfg("onepass")
+        keys, vals = _sparse(seed=3)
+        k20 = keys[:, :20]
+        v20 = vals[:, :20].astype(np.float32)  # what the plane buffers
+        budget = k20.nbytes + v20.nbytes  # == the raw fp32 batch size
+        raw_eng = E.SketchEngine(cfg, flush=P.FlushPolicy(
+            max_elems=None, max_bytes=budget))
+        raw_eng.ingest(k20, v20)
+        assert raw_eng.pending == 0  # raw bytes meet the budget: dispatched
+        enc_eng = E.SketchEngine(cfg, flush=P.FlushPolicy(
+            max_elems=None, max_bytes=budget),
+            plane_opts={"codec": "size_adaptive"})
+        enc_eng.ingest(k20, v20)
+        assert enc_eng.pending == 20  # encoded payload sits under budget
+        # int32 keys travel raw (dtype guard); small float values go fp16
+        assert enc_eng.plane.pending_bytes == k20.nbytes + v20.nbytes // 2
+        enc_eng.ingest(keys[:, 20:40], vals[:, 20:40])  # crosses -> flush
+        assert enc_eng.pending == 0
+
     def test_plane_interval_zero_dispatches_every_ingest(self):
         cfg = _cfg("onepass")
         keys, vals = _sparse(seed=2)
